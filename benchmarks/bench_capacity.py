@@ -1,0 +1,48 @@
+"""Paper §2 / Table-equivalent: centralized vs volunteer vs incentivized
+compute capacity.  Reproduces the paper's arithmetic from its cited
+constants and checks the two-orders-of-magnitude claims."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+
+# paper-cited constants
+H100_COUNT = 350_000                 # Meta 2024 purchase [80]
+H100_TFLOPS_TF32 = 989e12            # peak TF32 with sparsity off ~989; paper
+                                     # rounds to ~1 exaFLOP/kGPU ("350 exaFLOPS")
+H100_POWER_W = 700.0                 # SXM board power [60]
+VOLUNTEER_PEAK_FLOPS = 1.2e18        # Folding@Home 2020 [44]
+BITCOIN_TWH_YR = 150.0               # ±50 [56]
+HOURS_PER_YEAR = 8760.0
+WORLD_POWER_GW = 3_400.0             # ~0.5% claim check
+
+
+def run() -> list:
+    rows: list[Row] = []
+
+    meta_flops = H100_COUNT * H100_TFLOPS_TF32
+    rows.append(("capacity.meta_2024_exaflops", 0.0,
+                 f"{meta_flops / 1e18:.0f} exaFLOPS (paper: ~350)"))
+
+    meta_gw = H100_COUNT * H100_POWER_W / 1e9
+    rows.append(("capacity.meta_2024_gw", 0.0,
+                 f"{meta_gw:.2f} GW (paper: 0.24)"))
+
+    btc_gw = BITCOIN_TWH_YR * 1e12 / HOURS_PER_YEAR / 1e9
+    rows.append(("capacity.bitcoin_gw", 0.0,
+                 f"{btc_gw:.2f} GW (paper: 17.12)"))
+
+    rows.append(("capacity.btc_over_meta", 0.0,
+                 f"{btc_gw / meta_gw:.0f}x (paper: ~2 orders of magnitude)"))
+
+    vol_vs_meta = meta_flops / VOLUNTEER_PEAK_FLOPS
+    rows.append(("capacity.meta_over_volunteer", 0.0,
+                 f"{vol_vs_meta:.0f}x (paper: ~2 orders of magnitude)"))
+
+    rows.append(("capacity.btc_world_fraction", 0.0,
+                 f"{btc_gw / WORLD_POWER_GW * 100:.2f}% (paper: ~0.5%)"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,54 @@
+"""Paper §5.5: the No-Off problem, quantified.  Sweeps the attacker
+fraction across aggregation/verification regimes and prices the derailment
+attack (the only digital emergency brake the paper identifies)."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core.derailment import attack_cost, simulate_derailment
+from repro.core.verification import VerificationConfig
+from repro.optim.optimizer import SGD
+
+from benchmarks.bench_byzantine import _problem
+
+
+def run() -> list:
+    rows: list[Row] = []
+    loss_fn, params0, data_fn = _problem()
+    eval_fn = lambda p: loss_fn(p, data_fn(0, 10_000))
+    opt = SGD(lr=0.1, momentum=0.0)
+
+    n_honest = 10
+    for agg in ["mean", "centered_clip"]:
+        for n_attack in [1, 3, 6, 12]:
+            res = simulate_derailment(
+                loss_fn, params0, opt, data_fn, eval_fn,
+                n_honest=n_honest, n_attack=n_attack, rounds=25,
+                aggregator=agg, attack="inner_product", scale=50.0)
+            rows.append((
+                f"nooff.{agg}.frac{res.attacker_fraction:.2f}", 0.0,
+                f"derailed={res.derailed} "
+                f"final/base={res.final_loss / max(res.baseline_loss, 1e-9):.1f}"))
+
+    # with near-perfect verification the off-switch stops working (§5.5)
+    v = VerificationConfig(p_check=1.0, stake=5.0, tolerance=1e-3)
+    res = simulate_derailment(
+        loss_fn, params0, opt, data_fn, eval_fn,
+        n_honest=n_honest, n_attack=6, rounds=25,
+        aggregator="mean", verification=v, attack="inner_product")
+    rows.append(("nooff.verified.frac0.38", 0.0,
+                 f"derailed={res.derailed} slashed={res.attackers_slashed}/6 "
+                 "(derailment neutralized => only physical off remains)"))
+
+    # attack economics
+    for n_attack, ver in [(6, None), (6, v)]:
+        cost = attack_cost(n_attack, rounds=25, compute_cost_per_round=1.0,
+                           verification=ver)
+        rows.append((
+            f"nooff.attack_cost.{'verified' if ver else 'unverified'}", 0.0,
+            f"{cost:.0f} units (compute{'+stakes' if ver else ' only'})"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

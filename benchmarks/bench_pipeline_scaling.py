@@ -1,0 +1,63 @@
+"""Paper §3.2 / SWARM [71] square-cube claim: pipeline communication per
+unit compute SHRINKS as the model grows — large models are *more* amenable
+to internet-scale pipeline training, not less.
+
+comm per microbatch per boundary ∝ mb·d (activations);
+compute per layer per microbatch ∝ mb·d² (matmuls) ⇒ ratio ∝ 1/d.
+
+Validated with the assigned architectures' real dims + a wall-time
+microbench of one transformer layer vs its boundary transfer size."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timeit
+from repro.configs import get_config
+from repro.pipeline.pipeline import (
+    bubble_fraction,
+    pipeline_comm_bytes,
+    pipeline_compute_flops,
+)
+
+
+def run() -> list:
+    rows: list[Row] = []
+    seq, mb = 2048, 8
+
+    for arch in ["tinyllama-1.1b", "stablelm-3b", "mixtral-8x7b",
+                 "granite-20b"]:
+        cfg = get_config(arch)
+        d = cfg.d_model
+        act_bytes = mb * seq * d * 2                       # bf16 boundary
+        flops_layer_mb = 2 * (mb * seq) * (
+            3 * d * cfg.d_ff + 4 * d * cfg.resolved_head_dim * cfg.num_heads)
+        ratio = act_bytes / flops_layer_mb
+        rows.append((f"pipeline.comm_per_flop.{arch}", 0.0,
+                     f"d={d} bytes/flop={ratio:.2e} (shrinks with d)"))
+
+    # wall-time microbench: one dense layer fwd vs copying its activations
+    for d in [256, 512, 1024]:
+        w1 = jax.random.normal(jax.random.PRNGKey(0), (d, 4 * d), jnp.float32)
+        w2 = jax.random.normal(jax.random.PRNGKey(1), (4 * d, d), jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(2), (mb * 128, d))
+
+        layer = jax.jit(lambda x: jnp.tanh(x @ w1) @ w2)
+        us_compute = timeit(layer, x)
+        copy = jax.jit(lambda x: x + 0.0)
+        us_copy = timeit(copy, x)
+        rows.append((f"pipeline.layer_vs_boundary.d{d}", us_compute,
+                     f"copy={us_copy:.0f}us ratio={us_copy / us_compute:.3f}"))
+
+    rows.append(("pipeline.bubble_m8_p4", 0.0,
+                 f"{bubble_fraction(8, 4):.3f} (GPipe fill/drain)"))
+    rows.append(("pipeline.comm_bytes_m8_p4_1mb", 0.0,
+                 f"{pipeline_comm_bytes(8, 4, 1 << 20)} bytes/fwd"))
+    rows.append(("pipeline.flops_m8_p4", 0.0,
+                 f"{pipeline_compute_flops(8, 2, 10**9):.1e} per stage"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

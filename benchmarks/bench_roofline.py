@@ -1,0 +1,48 @@
+"""Deliverable (g): the roofline table, read from the dry-run artifacts in
+experiments/dryrun/ (produced by `python -m repro.launch.dryrun --all`).
+No compilation happens here — run the dry-run first."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+
+
+def load_records(out_dir: str = "experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run() -> list:
+    rows: list[Row] = []
+    recs = [r for r in load_records() if r.get("status") == "ok"]
+    if not recs:
+        rows.append(("roofline.missing", 0.0,
+                     "run `python -m repro.launch.dryrun --all` first"))
+        return rows
+
+    base = [r for r in recs if r["mesh"] == "single_pod"
+            and r["pod_sync"] == "dense" and r.get("microbatches", 1) == 1
+            and r.get("param_gather", "fsdp") == "fsdp"]
+    for r in sorted(base, key=lambda r: (r["arch"], r["shape"])):
+        roof = r["roofline"]
+        rows.append((
+            f"roofline.{r['arch']}.{r['shape']}", 0.0,
+            f"compute={roof['compute_s']:.3g}s memory={roof['memory_s']:.3g}s "
+            f"collective={roof['collective_s']:.3g}s dom={roof['dominant']} "
+            f"useful={roof['useful_flops_ratio']:.3f}"))
+
+    n_multi = len([r for r in recs if r["mesh"] == "multi_pod"])
+    rows.append(("roofline.multi_pod_compiled", 0.0,
+                 f"{n_multi} combinations on the 512-chip mesh"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

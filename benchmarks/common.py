@@ -1,0 +1,35 @@
+"""Shared benchmark plumbing: each bench module exposes ``run() -> rows``
+where a row is (name, us_per_call, derived) — printed as CSV by run.py."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds (CPU; jit-warmed)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    _block(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        _block(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _block(out):
+    import jax
+    for leaf in jax.tree.leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

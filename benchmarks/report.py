@@ -1,0 +1,82 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(out_dir):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_s(s):
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.1f}ms"
+    return f"{s * 1e6:.1f}us"
+
+
+def roofline_table(recs, mesh):
+    rows = ["| arch | shape | compute | memory | collective | dominant | "
+            "useful | temp/dev | peak/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    sel = [r for r in recs if r.get("status") == "ok" and r["mesh"] == mesh
+           and r["pod_sync"] == "dense" and r.get("microbatches", 1) == 1]
+    for r in sorted(sel, key=lambda r: (r["arch"], r["shape"])):
+        roof, mem = r["roofline"], r["memory"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(roof['compute_s'])} | "
+            f"{fmt_s(roof['memory_s'])} | {fmt_s(roof['collective_s'])} | "
+            f"{roof['dominant']} | {roof['useful_flops_ratio']:.3f} | "
+            f"{mem.get('temp_size_in_bytes', 0) / 1e9:.1f}GB | "
+            f"{mem.get('peak_memory_in_bytes', 0) / 1e9:.2f}GB |")
+    return "\n".join(rows)
+
+
+def collective_detail(recs, arch, shape, mesh="single_pod", pod_sync="dense"):
+    for r in recs:
+        if (r.get("arch"), r.get("shape"), r.get("mesh"),
+                r.get("pod_sync")) == (arch, shape, mesh, pod_sync):
+            out = []
+            for op, d in sorted(r["roofline"]["collectives"].items()):
+                out.append(f"  {op:24s} count={d['count']:8.0f} "
+                           f"wire={d['wire_bytes'] / 1e9:10.2f} GB")
+            return "\n".join(out)
+    return "(missing)"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--detail", nargs=2, metavar=("ARCH", "SHAPE"))
+    ap.add_argument("--mesh", default="single_pod")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.detail:
+        print(collective_detail(recs, args.detail[0], args.detail[1],
+                                args.mesh))
+        return
+    print("## single-pod (16x16 = 256 chips)\n")
+    print(roofline_table(recs, "single_pod"))
+    print("\n## multi-pod (2x16x16 = 512 chips)\n")
+    print(roofline_table(recs, "multi_pod"))
+    ok = [r for r in recs if r.get("status") == "ok"]
+    bad = [r for r in recs if r.get("status") != "ok"]
+    print(f"\n{len(ok)} ok, {len(bad)} failed")
+    for r in bad:
+        print("FAILED:", r.get("arch"), r.get("shape"), r.get("mesh"),
+              r.get("error", "")[:200])
+
+
+if __name__ == "__main__":
+    main()

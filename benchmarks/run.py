@@ -1,0 +1,54 @@
+"""Benchmark driver — one module per paper table/claim (DESIGN.md §0).
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  §2   capacity          centralized vs volunteer vs incentivized watts/FLOPS
+  §3.1 compression       wire ratios + loss impact + qsgd kernel
+  §3.2 gossip            convergence vs spectral gap, traffic vs all-reduce
+  §3.2 pipeline_scaling  SWARM square-cube: comm/compute shrinks with d_model
+  §3.3 byzantine         attacks x aggregators (+ centered_clip kernel)
+  §4.2 verification      stake/slash EV grid + measured catch rate
+  §5.5 derailment        no-off frontier + attack economics
+  (g)  roofline          per arch x shape terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    "bench_capacity",
+    "bench_compression",
+    "bench_gossip",
+    "bench_pipeline_scaling",
+    "bench_byzantine",
+    "bench_verification",
+    "bench_derailment",
+    "bench_roofline",
+]
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    selected = argv or MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        mod_name = name if name.startswith("bench_") else f"bench_{name}"
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            emit(mod.run())
+            print(f"# {mod_name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {mod_name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,91 @@
+"""The No-Off Problem (§5.5), measured: can a derailment attack — the one
+*digital* emergency brake — actually halt a protocol-learning run?
+
+Sweeps attacker fraction × aggregation × verification on a real (small) LM
+and prints the paper's qualitative table with numbers attached, plus the
+attack's price tag.
+
+    PYTHONPATH=src python examples/derailment_no_off.py
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.core.derailment import (
+    attack_cost,
+    no_off_report,
+    simulate_derailment,
+)
+from repro.core.verification import VerificationConfig
+from repro.data.pipeline import DataConfig, data_fn_for_swarm, model_batch
+from repro.models.model import build_model
+from repro.optim.optimizer import SGD
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    args = ap.parse_args()
+
+    cfg = get_config("protocol-125m").reduced(
+        num_layers=2, d_model=128, num_heads=4, head_dim=32, d_ff=512,
+        vocab_size=512)
+    model = build_model(cfg)
+    n_honest = 8
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                      global_batch=32)
+    params = model.init(jax.random.PRNGKey(0))
+    loss_fn = lambda p, b: model.loss(p, b)[0]
+    data_fn = data_fn_for_swarm(cfg, dcfg, 32)
+    eval_fn = lambda p: loss_fn(p, model_batch(cfg, dcfg, 10**6))
+    opt = SGD(lr=0.5, momentum=0.9)
+
+    vcfg = VerificationConfig(p_check=0.5, stake=10.0, tolerance=1e-3)
+    results = []
+    print("running derailment sweep (this trains a small LM repeatedly)...")
+    # one shared honest baseline for every cell (it would otherwise be
+    # recomputed 9x)
+    from repro.core.swarm import NodeSpec, Swarm, SwarmConfig
+    base_swarm = Swarm(loss_fn, params, opt,
+                       [NodeSpec(f"h{i}") for i in range(n_honest)],
+                       SwarmConfig(aggregator="mean"), data_fn)
+    baseline_loss = base_swarm.run(args.rounds, eval_fn=eval_fn,
+                                   eval_every=args.rounds)[-1]
+    print(f"  honest baseline loss after {args.rounds} rounds: "
+          f"{baseline_loss:.3f}")
+    for aggregator, verification in [("mean", None),
+                                     ("centered_clip", None),
+                                     ("mean", vcfg)]:
+        for n_attack in [1, 4, 10]:
+            res = simulate_derailment(
+                loss_fn, params, opt, data_fn, eval_fn,
+                n_honest=n_honest, n_attack=n_attack, rounds=args.rounds,
+                aggregator=aggregator, verification=verification,
+                attack="inner_product", scale=20.0,
+                baseline_loss=baseline_loss)
+            results.append(res)
+            print(f"  {aggregator:14s} verified={verification is not None!s:5s} "
+                  f"attackers={n_attack:2d} -> derailed={res.derailed}")
+
+    print("\n== §5.5 No-Off table ==")
+    print(no_off_report(results))
+
+    print("\n== attack economics ==")
+    for n_attack in [4, 10]:
+        c_unv = attack_cost(n_attack, args.rounds, compute_cost_per_round=1.0,
+                            verification=None)
+        c_ver = attack_cost(n_attack, args.rounds, compute_cost_per_round=1.0,
+                            verification=vcfg)
+        print(f"  {n_attack:2d} attackers x {args.rounds} rounds: "
+              f"unverified={c_unv:.0f} units, verified={c_ver:.0f} units "
+              f"(stakes burned)")
+
+    print("\nReading: under mean aggregation the off-switch works (and so "
+          "does any vandal); robust aggregation raises the bar to the "
+          "breakdown point; near-perfect verification neutralizes it — "
+          "the paper's conclusion that only physical intervention remains.")
+
+
+if __name__ == "__main__":
+    main()

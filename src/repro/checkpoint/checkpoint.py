@@ -1,0 +1,105 @@
+"""Sharded checkpointing with a custody manifest.
+
+Checkpoints are directories of .npz chunks plus a JSON manifest.  Two modes:
+
+- ``save`` / ``restore``      — standard full-tree checkpoints (train loop).
+- ``save_custody`` / ``restore_custody`` — Protocol-Model checkpoints: the
+  flat parameter stream is cut into custody shards (core.unextractable) and
+  each shard is written as a separate file keyed by holder, so "a checkpoint"
+  in Protocol Learning is *a set of files no single node ever holds all of*.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.unextractable import ShardCustody, reconstruct_params, shard_params
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree, *, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    arrays = _flatten_with_paths(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, template):
+    """Restore into the structure of ``template`` (shapes are validated)."""
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        arrays = {k: data[k] for k in data.files}
+    flat = jax.tree_util.tree_flatten_with_path(template)
+    paths, treedef = [p for p, _ in flat[0]], flat[1]
+    leaves = []
+    for path_e, leaf in flat[0]:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", e))) for e in path_e)
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def load_step(path: str) -> int:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["step"]
+
+
+# -- custody checkpoints (Protocol Models) -----------------------------------
+def save_custody(path: str, params, custody: ShardCustody, *, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    shards, true_size = shard_params(params, custody.num_shards)
+    for sid, holders in custody.assignment.items():
+        for holder in holders:
+            np.savez(os.path.join(path, f"shard_{sid}_{holder}.npz"),
+                     data=np.asarray(shards[sid]))
+    manifest = {
+        "step": step,
+        "num_shards": custody.num_shards,
+        "redundancy": custody.redundancy,
+        "true_size": true_size,
+        "assignment": {str(k): v for k, v in custody.assignment.items()},
+    }
+    with open(os.path.join(path, "custody.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore_custody(path: str, template, *, holders: List[str]):
+    """Reassemble from the shards the given holders possess.  Raises if the
+    coalition doesn't cover the model (the unextractability property)."""
+    with open(os.path.join(path, "custody.json")) as f:
+        manifest = json.load(f)
+    num_shards = manifest["num_shards"]
+    gathered: Dict[int, jnp.ndarray] = {}
+    for sid_s, shard_holders in manifest["assignment"].items():
+        sid = int(sid_s)
+        for h in shard_holders:
+            if h in holders:
+                fn = os.path.join(path, f"shard_{sid}_{h}.npz")
+                with np.load(fn) as z:
+                    gathered[sid] = jnp.asarray(z["data"])
+                break
+    if len(gathered) < num_shards:
+        raise PermissionError(
+            f"coalition holds {len(gathered)}/{num_shards} shards — cannot restore")
+    return reconstruct_params(gathered, template, num_shards, manifest["true_size"])

@@ -1,0 +1,22 @@
+"""seamless-m4t-medium — audio enc-dec backbone, 12L enc + 12L dec,
+d_model=1024 16H (kv=16) d_ff=4096 vocab=256206.  The mel-spectrogram /
+conv feature-extractor frontend is STUBBED per the assignment: input_specs
+provides precomputed frame embeddings.
+
+[arXiv:2308.11596]
+"""
+from repro.configs.base import AUDIO, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family=AUDIO,
+    source="arXiv:2308.11596",
+    num_layers=12,            # decoder layers
+    num_encoder_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    encoder_frames=4096,
+)

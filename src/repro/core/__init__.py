@@ -1,0 +1,25 @@
+"""Protocol Learning core: the paper's contribution as composable modules.
+
+- aggregation    : byzantine-robust aggregators (§3.3)
+- compression    : QSGD / top-k / PowerSGD wire compression (§3.1)
+- gossip         : gossip averaging + topologies (§3.2)
+- swarm          : elastic, heterogeneous, byzantine swarm trainer (§3)
+- ledger         : fractional-ownership credentials (§4)
+- verification   : stake/slash game-theoretic compute verification (§4.2)
+- unextractable  : Protocol Model custody + extraction economics (§4.1)
+- derailment     : the No-Off problem, quantified (§5.5)
+- hierarchical   : pod-axis sync (TPU adaptation of the internet layer)
+- protocol       : credential-gated Protocol Model server (§4.1)
+"""
+from repro.core import (  # noqa: F401
+    aggregation,
+    compression,
+    derailment,
+    gossip,
+    hierarchical,
+    ledger,
+    protocol,
+    swarm,
+    unextractable,
+    verification,
+)

@@ -1,0 +1,156 @@
+"""Byzantine-robust gradient aggregation (paper §3.3).
+
+Aggregators operate on a stack of per-node updates with leading axis N
+(nodes).  All of them work on flat vectors OR arbitrary pytrees (leading
+node axis on every leaf).
+
+Implemented (each cited in the paper):
+- ``mean``          — linear; NOT byzantine robust [6 shows 1 node suffices]
+- ``krum`` / ``multi_krum``  — Blanchard et al. [6]
+- ``coordinate_median`` / ``trimmed_mean`` — Yin et al. [89]
+- ``centered_clip`` — Karimireddy et al. [40], the aggregator Gorbunov et
+  al. [27] build on for decentralized byzantine SGD; Pallas kernel twin in
+  ``repro.kernels.centered_clip``.
+
+Breakdown points (validated in tests / benchmarks):
+  mean: 0; krum: (N-2)/2N needs N ≥ 2f+3; median/trimmed: 1/2; CC: ~1/2 (bounded error).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _flatten_nodes(updates):
+    """pytree with leading node axis -> (N, D) matrix + unravel fn."""
+    leaves = jax.tree.leaves(updates)
+    n = leaves[0].shape[0]
+    flat = jnp.concatenate([l.reshape(n, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+    treedef = jax.tree.structure(updates)
+    shapes = [l.shape[1:] for l in leaves]
+    sizes = [math.prod(s) if s else 1 for s in shapes]
+
+    def unravel(vec):
+        out, off = [], 0
+        for s, sz in zip(shapes, sizes):
+            out.append(vec[off:off + sz].reshape(s))
+            off += sz
+        return jax.tree.unflatten(treedef, out)
+
+    return flat, unravel
+
+
+def _as_matrix(fn):
+    """Adapt a (N, D)->(D,) aggregator to accept pytrees too."""
+    @functools.wraps(fn)
+    def wrapped(updates, **kw):
+        if isinstance(updates, jax.Array):
+            return fn(updates, **kw)
+        flat, unravel = _flatten_nodes(updates)
+        return unravel(fn(flat, **kw))
+    return wrapped
+
+
+@_as_matrix
+def mean(updates: Array) -> Array:
+    return jnp.mean(updates, axis=0)
+
+
+@_as_matrix
+def coordinate_median(updates: Array) -> Array:
+    return jnp.median(updates, axis=0)
+
+
+@_as_matrix
+def trimmed_mean(updates: Array, *, trim: int = 1) -> Array:
+    n = updates.shape[0]
+    trim = min(trim, (n - 1) // 2)
+    s = jnp.sort(updates, axis=0)
+    return jnp.mean(s[trim : n - trim], axis=0)
+
+
+def _krum_scores(updates: Array, f: int) -> Array:
+    """Krum score: sum of squared distances to the n-f-2 nearest neighbours."""
+    n = updates.shape[0]
+    d2 = jnp.sum(
+        jnp.square(updates[:, None, :] - updates[None, :, :]), axis=-1)
+    d2 = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, d2)  # exclude self
+    k = max(n - f - 2, 1)
+    nearest = -jax.lax.top_k(-d2, k)[0]                  # k smallest
+    return jnp.sum(nearest, axis=-1)
+
+
+@_as_matrix
+def krum(updates: Array, *, f: int = 1) -> Array:
+    scores = _krum_scores(updates, f)
+    return updates[jnp.argmin(scores)]
+
+
+@_as_matrix
+def multi_krum(updates: Array, *, f: int = 1, m: int = 0) -> Array:
+    n = updates.shape[0]
+    m = m or max(n - f - 2, 1)
+    scores = _krum_scores(updates, f)
+    _, idx = jax.lax.top_k(-scores, m)                   # m best (lowest) scores
+    return jnp.mean(updates[idx], axis=0)
+
+
+@_as_matrix
+def centered_clip(updates: Array, *, clip_tau: float | None = None,
+                  iters: int = 3, v0: Array | None = None) -> Array:
+    """CenteredClip [40]:  v ← v + mean_i clip(x_i − v, τ), iterated.
+
+    Provably robust aggregation with bounded error under < 1/2 byzantine
+    fraction (with bounded honest variance).  ``v0`` warm-starts from the
+    previous round's aggregate (as in [27]); the default warm start is the
+    coordinate median (robust — a mean start can be pre-corrupted beyond
+    τ·iters reach).  ``clip_tau=None`` adapts τ to the median node distance
+    each iteration, so the clip radius tracks the gradient scale (a fixed
+    τ=1 on gradients of norm ~100 would freeze v at its warm start).
+    """
+    v = (jnp.median(updates, axis=0) if v0 is None
+         else v0.astype(jnp.float32))
+
+    def body(v, _):
+        diff = updates - v[None]
+        norm = jnp.linalg.norm(diff, axis=-1, keepdims=True)
+        tau = (jnp.median(norm) if clip_tau is None else clip_tau)
+        scale = jnp.minimum(1.0, tau / jnp.maximum(norm, 1e-12))
+        return v + jnp.mean(diff * scale, axis=0), None
+
+    v, _ = jax.lax.scan(body, v, None, length=iters)
+    return v
+
+
+AGGREGATORS: Dict[str, Callable] = {
+    "mean": mean,
+    "median": coordinate_median,
+    "trimmed_mean": trimmed_mean,
+    "krum": krum,
+    "multi_krum": multi_krum,
+    "centered_clip": centered_clip,
+}
+
+
+def get_aggregator(name: str, **defaults) -> Callable:
+    fn = AGGREGATORS[name]
+    return functools.partial(fn, **defaults) if defaults else fn
+
+
+def breakdown_point(name: str, n: int) -> float:
+    """Max tolerated byzantine fraction (theory; validated empirically)."""
+    return {
+        "mean": 0.0,
+        "median": 0.5,
+        "trimmed_mean": 0.5,
+        "krum": max(0.0, (n - 3) / (2 * n)),
+        "multi_krum": max(0.0, (n - 3) / (2 * n)),
+        "centered_clip": 0.5,
+    }[name]

@@ -1,0 +1,119 @@
+"""The No-Off Problem & model-derailment attacks (paper §5.5).
+
+The paper's core novel risk: a decentralized model cannot be unilaterally
+halted.  The one *digital* emergency brake is a derailment attack — joining
+the swarm and submitting destructive gradients.  Its effectiveness depends
+on the aggregation rule and the verification regime:
+
+- mean aggregation + no verification  → tiny attacker fractions derail
+  (the off-switch works, but so does any vandal);
+- robust aggregation                  → derailment needs ≥ breakdown-point
+  fraction of the swarm;
+- near-perfect cheap verification     → derailment is slashed away faster
+  than it damages; the paper concludes only physical intervention remains.
+
+``simulate_derailment`` measures this on a real training run;
+``attack_cost`` prices the attack (compute + slashed stakes); ``no_off_report``
+assembles the paper's qualitative table quantitatively.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.swarm import NodeSpec, Swarm, SwarmConfig
+from repro.core.verification import VerificationConfig
+
+
+@dataclass(frozen=True)
+class DerailmentResult:
+    attacker_fraction: float
+    aggregator: str
+    verified: bool
+    final_loss: float
+    baseline_loss: float
+    attackers_slashed: int
+    n_attackers: int
+    init_loss: Optional[float] = None
+
+    @property
+    def derailed(self) -> bool:
+        """Derailed = the run recovered less than half the honest learning
+        progress (catches both divergence AND saturation-stall attacks,
+        where the loss freezes near init while gradients vanish)."""
+        if not np.isfinite(self.final_loss):
+            return True
+        if self.init_loss is not None and np.isfinite(self.init_loss) \
+                and self.init_loss > self.baseline_loss:
+            half = self.baseline_loss + 0.5 * (self.init_loss - self.baseline_loss)
+            return bool(self.final_loss > half)
+        return bool(self.final_loss > 1.5 * self.baseline_loss + 0.5)
+
+
+def make_swarm_nodes(n_honest: int, n_attack: int, attack: str = "inner_product",
+                     scale: float = 50.0):
+    nodes = [NodeSpec(f"h{i}") for i in range(n_honest)]
+    nodes += [NodeSpec(f"adv{i}", byzantine=attack, byzantine_scale=scale)
+              for i in range(n_attack)]
+    return nodes
+
+
+def simulate_derailment(loss_fn, init_params, optimizer, data_fn, eval_fn, *,
+                        n_honest: int, n_attack: int, rounds: int,
+                        aggregator: str = "mean",
+                        verification: Optional[VerificationConfig] = None,
+                        attack: str = "inner_product", scale: float = 50.0,
+                        baseline_loss: Optional[float] = None,
+                        seed: int = 0) -> DerailmentResult:
+    init_loss = float(eval_fn(init_params))
+    nodes = make_swarm_nodes(n_honest, n_attack, attack, scale)
+    cfg = SwarmConfig(aggregator=aggregator, verification=verification, seed=seed,
+                      agg_kwargs={"f": max(1, n_attack)} if "krum" in aggregator else {})
+    swarm = Swarm(loss_fn, init_params, optimizer, nodes, cfg, data_fn)
+    losses = swarm.run(rounds, eval_fn=eval_fn, eval_every=max(1, rounds // 5))
+
+    if baseline_loss is None:
+        base = Swarm(loss_fn, init_params, optimizer,
+                     [NodeSpec(f"h{i}") for i in range(n_honest)],
+                     SwarmConfig(aggregator="mean", seed=seed), data_fn)
+        baseline_loss = base.run(rounds, eval_fn=eval_fn, eval_every=rounds)[-1]
+
+    return DerailmentResult(
+        attacker_fraction=n_attack / (n_honest + n_attack),
+        aggregator=aggregator,
+        verified=verification is not None,
+        final_loss=losses[-1],
+        baseline_loss=baseline_loss,
+        attackers_slashed=sum(1 for s in swarm.slashed if s.startswith("adv")),
+        n_attackers=n_attack,
+        init_loss=init_loss,
+    )
+
+
+# -- economics -------------------------------------------------------------------
+def attack_cost(n_attackers: int, rounds: int, *, compute_cost_per_round: float,
+                verification: Optional[VerificationConfig]) -> float:
+    """Price of running the derailment: compute + expected slashed stakes.
+
+    With stake/slash verification each attacker's stake is destroyed with
+    prob p_check each round; expected rounds to slash = 1/p_check, so the
+    attacker re-stakes ~ rounds·p_check times.
+    """
+    compute = n_attackers * rounds * compute_cost_per_round
+    if verification is None:
+        return compute
+    expected_slashes = n_attackers * min(rounds * verification.p_check, rounds)
+    return compute + expected_slashes * verification.stake
+
+
+def no_off_report(results) -> str:
+    """Render the §5.5 analysis from a list of DerailmentResult."""
+    lines = ["attacker_frac  aggregator      verified  derailed  slashed  final/baseline"]
+    for r in results:
+        lines.append(
+            f"{r.attacker_fraction:12.2f}  {r.aggregator:14s}  {str(r.verified):8s}"
+            f"  {str(r.derailed):8s}  {r.attackers_slashed}/{r.n_attackers:<6d}"
+            f"  {r.final_loss / max(r.baseline_loss, 1e-9):6.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,105 @@
+"""Hierarchy-aware gradient sync across the pod axis (DESIGN.md §2).
+
+The TPU-native adaptation of the paper's internet-scale techniques: inside a
+pod, gradients are exact (pjit handles it); ACROSS pods — the slow axis —
+the Protocol Learning toolbox applies.  All methods are written with
+jax.lax collectives and are called inside shard_map over the ``pod`` axis.
+
+Methods (selectable via TrainOptions.pod_sync):
+- dense      : pmean — the exact baseline.
+- qsgd       : int8-quantized all-gather + local dequant/mean.  The wire
+               tensor is int8, so the roofline collective term drops ~4x —
+               visible directly in the dry-run HLO (§Perf).
+- centered_clip : all-gather full updates, robust-aggregate (byzantine-
+               tolerant across pods; [27, 40]).
+- gossip     : ring ppermute rounds — O(rounds) neighbour exchanges instead
+               of a global all-reduce; converges geometrically ([7, 10]).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation
+
+Array = jax.Array
+
+
+def dense_sync(grads, axis: str):
+    return jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+
+
+def qsgd_sync(grads, axis: str, *, bits: int = 8):
+    """Quantize-then-all-gather: int8 on the wire, fp32 result."""
+    qmax = 2 ** (bits - 1) - 1
+
+    def per_leaf(g):
+        gf = g.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(gf)) / qmax + 1e-30
+        q = jnp.clip(jnp.round(gf / scale), -qmax, qmax).astype(jnp.int8)
+        qs = jax.lax.all_gather(q, axis)                     # int8 on the wire
+        ss = jax.lax.all_gather(scale, axis)
+        deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * gf.ndim)
+        return jnp.mean(deq, axis=0).astype(g.dtype)
+
+    return jax.tree.map(per_leaf, grads)
+
+
+def centered_clip_sync(grads, axis: str, *, clip_tau: float | None = None,
+                       iters: int = 3):
+    """Byzantine-robust cross-pod aggregation: every pod is a 'node'."""
+    return robust_sync(grads, axis, aggregator="centered_clip",
+                       clip_tau=clip_tau, iters=iters)
+
+
+def robust_sync(grads, axis: str, *, aggregator: str = "centered_clip", **kw):
+    """All-gather per-pod updates over ``axis`` and apply ANY robust
+    aggregator from core.aggregation (median / trimmed_mean / krum / CC).
+    The gather is the measured 'price of byzantine tolerance' on the pod
+    axis (EXPERIMENTS.md §Perf pair C)."""
+    stacked = jax.tree.map(
+        lambda g: jax.lax.all_gather(g.astype(jnp.float32), axis), grads)
+    agg = aggregation.get_aggregator(aggregator, **kw)(stacked)
+    return jax.tree.map(lambda a, g: a.astype(g.dtype), agg, grads)
+
+
+def median_sync(grads, axis: str):
+    return robust_sync(grads, axis, aggregator="median")
+
+
+def gossip_sync(grads, axis: str, *, rounds: int = 1):
+    """Ring gossip: each round averages with both ring neighbours."""
+    n = jax.lax.axis_size(axis)
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+
+    def one_round(g):
+        def per_leaf(x):
+            xf = x.astype(jnp.float32)
+            right = jax.lax.ppermute(xf, axis, fwd)
+            if n == 2:
+                return ((xf + right) / 2).astype(x.dtype)
+            left = jax.lax.ppermute(xf, axis, bwd)
+            return ((xf + left + right) / 3).astype(x.dtype)
+        return jax.tree.map(per_leaf, g)
+
+    for _ in range(rounds):
+        grads = one_round(grads)
+    return grads
+
+
+POD_SYNC = {
+    "dense": dense_sync,
+    "qsgd": qsgd_sync,
+    "centered_clip": centered_clip_sync,
+    "median": median_sync,
+    "gossip": gossip_sync,
+}
+
+
+def get_pod_sync(name: str, **kw):
+    fn = POD_SYNC[name]
+    return functools.partial(fn, **kw) if kw else fn

@@ -1,0 +1,75 @@
+"""Fractional-ownership ledger (paper §4): contribution-proportional shares.
+
+The incentive core of Protocol Learning: each verified unit of useful work
+mints shares; inference access requires credentials backed by shares; a
+slashed node loses its stake (verification.py) and forfeits pending shares.
+
+Invariants (property-tested):
+- conservation: total_shares == Σ balances (+ burned)
+- monotonicity: honest work never decreases a node's balance
+- proportionality: balances / total == contributed work / total work
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+
+@dataclass
+class Ledger:
+    balances: Dict[str, float] = field(default_factory=dict)
+    stakes: Dict[str, float] = field(default_factory=dict)
+    burned: float = 0.0          # forfeited shares
+    burned_stake: float = 0.0    # destroyed staked capital
+    history: List[Tuple[str, str, float]] = field(default_factory=list)
+
+    # -- shares ---------------------------------------------------------------
+    @property
+    def total_shares(self) -> float:
+        return sum(self.balances.values())
+
+    def record_contribution(self, node: str, work_units: float) -> None:
+        if work_units < 0:
+            raise ValueError("work must be non-negative")
+        self.balances[node] = self.balances.get(node, 0.0) + work_units
+        self.history.append(("mint", node, work_units))
+
+    def ownership_fraction(self, node: str) -> float:
+        t = self.total_shares
+        return self.balances.get(node, 0.0) / t if t > 0 else 0.0
+
+    def transfer(self, src: str, dst: str, amount: float) -> None:
+        """Credentials are transferable (paper §4.1)."""
+        if amount < 0 or self.balances.get(src, 0.0) < amount:
+            raise ValueError("insufficient balance")
+        self.balances[src] -= amount
+        self.balances[dst] = self.balances.get(dst, 0.0) + amount
+        self.history.append(("transfer", f"{src}->{dst}", amount))
+
+    # -- staking / slashing -----------------------------------------------------
+    def stake(self, node: str, amount: float) -> None:
+        if amount < 0:
+            raise ValueError("stake must be non-negative")
+        self.stakes[node] = self.stakes.get(node, 0.0) + amount
+
+    def slash(self, node: str) -> float:
+        """Destroy the node's stake + forfeit its shares (caught cheating)."""
+        stake_lost = self.stakes.pop(node, 0.0)
+        shares_lost = self.balances.pop(node, 0.0)
+        self.burned += shares_lost
+        self.burned_stake += stake_lost
+        self.history.append(("slash", node, stake_lost + shares_lost))
+        return stake_lost + shares_lost
+
+    def pay_jackpot(self, validator: str, amount: float) -> None:
+        """Validator reward for catching bad work [41, 66]."""
+        self.balances[validator] = self.balances.get(validator, 0.0) + amount
+        self.history.append(("jackpot", validator, amount))
+
+    # -- inference credentials (§4.1) -----------------------------------------
+    def can_infer(self, holder: str, min_shares: float = 0.0) -> bool:
+        return self.balances.get(holder, 0.0) > min_shares
+
+    def check_conservation(self) -> bool:
+        minted = sum(a for op, _, a in self.history if op in ("mint", "jackpot"))
+        return abs((self.total_shares + self.burned) - minted) < 1e-6 * max(1.0, minted)

@@ -1,0 +1,93 @@
+"""Protocol Model server (paper §4.1): credential-gated, custody-sharded
+inference.
+
+The serving counterpart of the swarm trainer: weights live only as custody
+shards across participants; a request is served by reassembling activations
+*inside* the protocol (here: reconstructing params transiently from the
+full custody set, which by construction requires the whole swarm); callers
+interact only through logits, never weights; access requires ledger
+credentials.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ledger import Ledger
+from repro.core.unextractable import (
+    ShardCustody,
+    reconstruct_params,
+    shard_params,
+)
+
+Array = jax.Array
+
+
+class ExtractionError(PermissionError):
+    pass
+
+
+class CredentialError(PermissionError):
+    pass
+
+
+@dataclass
+class ProtocolModelServer:
+    """Inference only within the protocol; weights never leave it."""
+
+    model: object                        # repro.models.Model
+    custody: ShardCustody
+    ledger: Ledger
+    _shards: Dict[str, Dict[int, Array]] = None     # node -> {shard_id: data}
+    _template: object = None
+    _true_size: int = 0
+
+    @classmethod
+    def create(cls, model, params, nodes: List[str], ledger: Ledger, *,
+               num_shards: int = 16, redundancy: int = 2, seed: int = 0,
+               max_fraction: float = 0.5):
+        custody = ShardCustody.assign(nodes, num_shards, redundancy, seed,
+                                      max_fraction)
+        shards, true_size = shard_params(params, num_shards)
+        per_node: Dict[str, Dict[int, Array]] = {n: {} for n in nodes}
+        for sid, holders in custody.assignment.items():
+            for h in holders:
+                per_node[h][sid] = shards[sid]
+        template = jax.tree.map(lambda x: x, params)
+        srv = cls(model=model, custody=custody, ledger=ledger)
+        srv._shards = per_node
+        srv._template = template
+        srv._true_size = true_size
+        return srv
+
+    # -- the only public capability: logits ------------------------------------
+    def serve(self, holder: str, batch, *, online_nodes: Optional[List[str]] = None):
+        if not self.ledger.can_infer(holder):
+            raise CredentialError(f"{holder} holds no credentials")
+        nodes = online_nodes if online_nodes is not None else list(self._shards)
+        gathered: Dict[int, Array] = {}
+        for n in nodes:
+            gathered.update(self._shards.get(n, {}))
+        if len(gathered) < self.custody.num_shards:
+            raise ExtractionError(
+                f"swarm incomplete: {len(gathered)}/{self.custody.num_shards} shards online")
+        params = reconstruct_params(gathered, self._template,
+                                    self.custody.num_shards, self._true_size)
+        return self.model.prefill(params, batch)
+
+    # -- what an attacker coalition gets ----------------------------------------
+    def attempt_extraction(self, coalition: List[str]):
+        """Returns the (broken) params a coalition can reassemble — tests show
+        they are unusable below full coverage."""
+        gathered: Dict[int, Array] = {}
+        for n in coalition:
+            gathered.update(self._shards.get(n, {}))
+        if len(gathered) >= self.custody.num_shards:
+            raise ExtractionError(
+                "coalition covers the full model — custody bound violated; "
+                "this configuration is NOT a Protocol Model")
+        return reconstruct_params(gathered, self._template,
+                                  self.custody.num_shards, self._true_size)

@@ -1,0 +1,142 @@
+"""Protocol Models & unextractability (paper §4.1).
+
+A Protocol Model is (1) trustlessly co-trainable and (2) never extractable:
+no coalition can reassemble a usable weight set for less compute than
+retraining.  This module implements the custody layer and the extraction-
+economics analysis the definition rests on:
+
+- ``ShardCustody``: redundant assignment of parameter shards to nodes
+  (redundancy r for elasticity — Moshpit/SWARM style), with the invariant
+  that a single node holds ≤ max_fraction of the model.
+- coalition analysis: which fraction of the weights a coalition covers, the
+  minimum coalition that covers everything, and the economic comparison
+  cost(acquire missing shards) vs cost(retrain) = 6·N·D.
+- an actual ``reconstruct``: proves extraction *succeeds* exactly when
+  coverage is complete — and that below full coverage the reassembled model
+  is missing shards (tests show its loss is garbage).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclass
+class ShardCustody:
+    num_shards: int
+    redundancy: int
+    assignment: Dict[int, List[str]]          # shard -> holders
+    node_shards: Dict[str, Set[int]]          # node -> shards held
+
+    @staticmethod
+    def assign(nodes: Sequence[str], num_shards: int, redundancy: int = 2,
+               seed: int = 0, max_fraction: float = 0.5) -> "ShardCustody":
+        """Round-robin-with-shuffle assignment honouring the custody bound."""
+        rng = np.random.default_rng(seed)
+        per_node_cap = int(np.ceil(max_fraction * num_shards))
+        assignment: Dict[int, List[str]] = {}
+        node_shards: Dict[str, Set[int]] = {n: set() for n in nodes}
+        order = list(nodes)
+        for s in range(num_shards):
+            rng.shuffle(order)
+            holders = []
+            for n in order:
+                if len(node_shards[n]) < per_node_cap:
+                    holders.append(n)
+                    node_shards[n].add(s)
+                if len(holders) == redundancy:
+                    break
+            if len(holders) < redundancy:
+                raise ValueError("custody bound too tight for this swarm size")
+            assignment[s] = holders
+        return ShardCustody(num_shards, redundancy, assignment, node_shards)
+
+    # -- coverage ---------------------------------------------------------------
+    def coverage(self, coalition: Sequence[str]) -> float:
+        covered = set()
+        for n in coalition:
+            covered |= self.node_shards.get(n, set())
+        return len(covered) / self.num_shards
+
+    def can_extract(self, coalition: Sequence[str]) -> bool:
+        return self.coverage(coalition) >= 1.0
+
+    def min_extraction_coalition(self) -> int:
+        """Greedy set-cover lower bound on coalition size for full coverage."""
+        remaining = set(range(self.num_shards))
+        size = 0
+        shards = {n: set(s) for n, s in self.node_shards.items()}
+        while remaining:
+            best = max(shards, key=lambda n: len(shards[n] & remaining), default=None)
+            if best is None or not (shards[best] & remaining):
+                return -1
+            remaining -= shards[best]
+            del shards[best]
+            size += 1
+        return size
+
+    def tolerates_departures(self, departed: Sequence[str]) -> bool:
+        """Elasticity: the swarm still holds every shard after departures."""
+        gone = set(departed)
+        return all(any(h not in gone for h in holders)
+                   for holders in self.assignment.values())
+
+
+# -- shard/reassemble real parameter trees ---------------------------------------
+def shard_params(params, num_shards: int):
+    """Split a parameter pytree into num_shards flat chunks."""
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in jax.tree.leaves(params)])
+    pad = (-flat.size) % num_shards
+    flat = jnp.pad(flat, (0, pad))
+    return list(flat.reshape(num_shards, -1)), flat.size - pad
+
+
+def reconstruct_params(shards: Dict[int, Array], template, num_shards: int,
+                       true_size: int):
+    """Reassemble from held shards; missing shards are zero-filled (unusable)."""
+    size = shards[next(iter(shards))].size if shards else 0
+    flat = jnp.zeros((num_shards * size,), jnp.float32)
+    for i, s in shards.items():
+        flat = flat.at[i * size:(i + 1) * size].set(s)
+    flat = flat[:true_size]
+    leaves = jax.tree.leaves(template)
+    out, off = [], 0
+    rebuilt = []
+    for l in leaves:
+        rebuilt.append(flat[off:off + l.size].reshape(l.shape).astype(l.dtype))
+        off += l.size
+    return jax.tree.unflatten(jax.tree.structure(template), rebuilt)
+
+
+# -- economics (the definition's inequality) ------------------------------------
+def retrain_cost_flops(param_count: int, tokens: int) -> float:
+    return 6.0 * param_count * tokens
+
+
+def extraction_cost_flops(custody: ShardCustody, coalition: Sequence[str],
+                          cost_per_shard_flops: float) -> float:
+    """Cost to acquire the shards the coalition is missing, by doing enough
+    verified work to be assigned custody of each (join-and-leech strategy)."""
+    covered = set()
+    for n in coalition:
+        covered |= custody.node_shards.get(n, set())
+    missing = custody.num_shards - len(covered)
+    return missing * cost_per_shard_flops
+
+
+def is_protocol_model(custody: ShardCustody, coalition: Sequence[str],
+                      param_count: int, tokens: int,
+                      cost_per_shard_flops: float) -> bool:
+    """Paper §4.1 property 2 for this coalition: extraction ≥ retraining."""
+    if custody.can_extract(coalition):
+        return False
+    return (extraction_cost_flops(custody, coalition, cost_per_shard_flops)
+            >= retrain_cost_flops(param_count, tokens))

@@ -1,0 +1,82 @@
+"""Compute verification (paper §4.2).
+
+The paper rejects proof-of-learning for frontier workloads (numerical
+nondeterminism [20, 73]) and lands on *game-theoretic* verification:
+contributors stake capital; validators recompute a random subset of claimed
+gradients and slash on mismatch beyond a tolerance; jackpots incentivize
+validation [41, 66].
+
+This module implements that mechanism over real gradients, with the
+real-world numerical spread *simulated* as configurable noise (this
+container's XLA/CPU is deterministic — DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class VerificationConfig:
+    p_check: float = 0.1            # probability a given update is audited
+    stake: float = 10.0             # capital locked per contributor
+    reward_per_step: float = 1.0    # shares minted per verified step
+    tolerance: float = 1e-3         # relative mismatch tolerated (nondeterminism)
+    jackpot: float = 5.0            # validator reward for a catch
+    numeric_noise: float = 1e-5     # simulated cross-stack nondeterminism
+
+
+def relative_mismatch(claimed, recomputed) -> Array:
+    """‖claimed − recomputed‖ / ‖recomputed‖ over the full update pytree."""
+    c = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in jax.tree.leaves(claimed)])
+    r = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in jax.tree.leaves(recomputed)])
+    return jnp.linalg.norm(c - r) / jnp.maximum(jnp.linalg.norm(r), 1e-30)
+
+
+def audit(claimed, recompute_fn: Callable[[], object], cfg: VerificationConfig,
+          key: Array) -> tuple[bool, Array]:
+    """Recompute the work and compare.  Returns (passes, mismatch).
+
+    ``recompute_fn`` re-runs the gradient; simulated nondeterminism is added
+    so honest work shows a small nonzero mismatch — the tolerance must
+    absorb it (paper: proofs fail precisely because this spread exists).
+    """
+    recomputed = recompute_fn()
+    noisy = jax.tree.map(
+        lambda x: x + cfg.numeric_noise * jax.random.normal(key, x.shape, jnp.float32)
+        * jnp.linalg.norm(x.astype(jnp.float32)) / np.sqrt(max(1, x.size)),
+        recomputed,
+    )
+    mm = relative_mismatch(claimed, noisy)
+    return bool(mm <= cfg.tolerance), mm
+
+
+# -- economics (paper §4.2 / §5.5) ---------------------------------------------
+def expected_cheat_value(gain_per_step: float, cfg: VerificationConfig) -> float:
+    """E[value of submitting fake work for one step]."""
+    return gain_per_step - cfg.p_check * cfg.stake
+
+
+def honest_value(cost_per_step: float, cfg: VerificationConfig) -> float:
+    return cfg.reward_per_step - cost_per_step
+
+
+def cheating_irrational(gain_per_step: float, cfg: VerificationConfig) -> bool:
+    """The protocol is incentive-secure when cheating has negative EV."""
+    return expected_cheat_value(gain_per_step, cfg) < 0
+
+
+def min_p_check(gain_per_step: float, stake: float) -> float:
+    """Smallest audit rate making cheating irrational for a given stake."""
+    return min(1.0, gain_per_step / max(stake, 1e-12))
+
+
+def validator_ev(cost_of_audit: float, p_cheater: float, cfg: VerificationConfig) -> float:
+    """Validators audit iff jackpot × catch-rate exceeds audit cost."""
+    return p_cheater * cfg.jackpot - cost_of_audit

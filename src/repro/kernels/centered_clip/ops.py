@@ -1,0 +1,27 @@
+"""Jit'd CenteredClip wrapper: full iterated aggregation over (N, D)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.centered_clip.kernel import centered_clip_iter_fwd
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("clip_tau", "iters", "block_d", "interpret"))
+def centered_clip(updates, *, clip_tau: float = 1.0, iters: int = 3,
+                  v0=None, block_d: int = 2048, interpret: bool = False):
+    """updates: (N, D) -> (D,) robust aggregate (kernel twin of
+    repro.core.aggregation.centered_clip with an explicit static τ — the
+    adaptive-τ variant computes τ outside and passes it here).
+
+    Warm start matches the reference: coordinate median unless v0 given.
+    """
+    upd = updates.astype(jnp.float32)
+    v = jnp.median(upd, axis=0) if v0 is None else v0.astype(jnp.float32)
+    for _ in range(iters):
+        v = centered_clip_iter_fwd(upd, v, clip_tau=clip_tau,
+                                   block_d=block_d, interpret=interpret)
+    return v

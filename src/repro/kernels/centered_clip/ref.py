@@ -1,0 +1,4 @@
+"""Pure-jnp oracle — the model-level aggregator IS the reference."""
+from __future__ import annotations
+
+from repro.core.aggregation import centered_clip as centered_clip_ref  # noqa: F401

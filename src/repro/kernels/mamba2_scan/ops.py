@@ -1,0 +1,27 @@
+"""Jit'd SSD wrapper with the same surface as models.mamba2.ssd_chunked."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba2_scan.kernel import ssd_scan_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_pallas(x, dt, a, b, c, d_skip, *, chunk: int = 128, h0=None,
+                       interpret: bool = False):
+    """x: (B, S, H, P); dt: (B, S, H); a: (H,); b, c: (B, S, N).
+    Returns (y (B, S, H, P), h_final (B, H, P, N)) — matches ssd_chunked."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    adt = a[None, None, :] * dt
+    y, hf = ssd_scan_fwd(xdt, adt, b.astype(jnp.float32),
+                         c.astype(jnp.float32), h0, chunk=chunk,
+                         interpret=interpret)
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y.astype(x.dtype), hf

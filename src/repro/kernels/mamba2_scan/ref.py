@@ -1,0 +1,4 @@
+"""Pure-jnp oracle: the token-by-token SSD recurrence."""
+from __future__ import annotations
+
+from repro.models.mamba2 import ssd_reference  # noqa: F401

@@ -1,0 +1,47 @@
+"""Jit'd QSGD wrappers: arbitrary-shape tensors in, (codes, norm) out."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qsgd.kernel import LANE, qsgd_encode_fwd
+
+Array = jax.Array
+
+
+def _to_lanes(x: Array):
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % LANE
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANE), pad
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "interpret"))
+def qsgd_encode(key, x: Array, *, levels: int = 64, interpret: bool = False):
+    """Returns (codes int8 (R,128), norm fp32 scalar, pad).  Unbiased."""
+    x2d, pad = _to_lanes(x)
+    norm = jnp.linalg.norm(x2d)
+    rnd = jax.random.uniform(key, x2d.shape, jnp.float32)
+    q = qsgd_encode_fwd(x2d, rnd, norm, levels=levels, interpret=interpret)
+    return q, norm
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "shape"))
+def qsgd_decode(q: Array, norm: Array, *, levels: int, shape: tuple):
+    size = 1
+    for d in shape:
+        size *= d
+    mag = q.astype(jnp.float32) / levels * norm
+    return mag.reshape(-1)[:size].reshape(shape)
+
+
+def qsgd_roundtrip(key, x: Array, *, levels: int = 64, interpret: bool = False):
+    q, norm = qsgd_encode(key, x, levels=levels, interpret=interpret)
+    return qsgd_decode(q, norm, levels=levels, shape=tuple(x.shape))
+
+
+def wire_bits(x: Array) -> int:
+    """int8 code per element + fp32 norm."""
+    return x.size * 8 + 32

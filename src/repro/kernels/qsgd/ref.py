@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the QSGD kernel — same codes, bit for bit."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qsgd.kernel import LANE
+
+
+def qsgd_encode_ref(x2d, rnd2d, norm, *, levels: int = 64):
+    """Mirror of kernel._kernel on a full (R, 128) array."""
+    x = x2d.astype(jnp.float32)
+    scaled = jnp.abs(x) / jnp.maximum(norm, 1e-30) * levels
+    lower = jnp.floor(scaled)
+    p = scaled - lower
+    q = lower + (rnd2d < p).astype(jnp.float32)
+    q = jnp.where(jnp.signbit(x), -q, q)
+    return q.astype(jnp.int8)
+
+
+def qsgd_roundtrip_ref(key, x, *, levels: int = 64):
+    """Encode+decode via the oracle (matches ops.qsgd_roundtrip)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % LANE
+    x2d = jnp.pad(flat, (0, pad)).reshape(-1, LANE)
+    norm = jnp.linalg.norm(x2d)
+    rnd = jax.random.uniform(key, x2d.shape, jnp.float32)
+    q = qsgd_encode_ref(x2d, rnd, norm, levels=levels)
+    mag = q.astype(jnp.float32) / levels * norm
+    return mag.reshape(-1)[:flat.size].reshape(x.shape)

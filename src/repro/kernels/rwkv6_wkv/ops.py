@@ -1,0 +1,24 @@
+"""Jit'd WKV wrapper with the same surface as models.rwkv6.wkv_chunked."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_wkv.kernel import wkv_scan_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_chunked_pallas(r, k, v, w, u, *, chunk: int = 64, s0=None,
+                       interpret: bool = False):
+    """r, k, v, w: (B, S, H, K) with w the per-step decay in (0, 1);
+    u: (H, K).  Returns (y, s_final) — matches wkv_chunked."""
+    bsz, s, h, dk = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((bsz, h, dk, dk), jnp.float32)
+    logw = jnp.log(w.astype(jnp.float32))
+    y, sf = wkv_scan_fwd(r.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), logw, u.astype(jnp.float32),
+                         s0, chunk=chunk, interpret=interpret)
+    return y.astype(r.dtype), sf

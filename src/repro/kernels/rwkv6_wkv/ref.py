@@ -1,0 +1,4 @@
+"""Pure-jnp oracle: the token-by-token WKV recurrence."""
+from __future__ import annotations
+
+from repro.models.rwkv6 import wkv_reference  # noqa: F401

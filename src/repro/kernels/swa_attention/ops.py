@@ -1,0 +1,19 @@
+"""Jit'd public wrapper: model layout (B, S, H, hd) in/out."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.swa_attention.kernel import swa_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "interpret"))
+def swa_attention(q, k, v, *, window: int, block_q: int = 128,
+                  interpret: bool = False):
+    """q: (B, S, H, hd); k, v: (B, S, Hkv, hd) -> (B, S, H, hd)."""
+    o = swa_attention_fwd(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        window=window, block_q=block_q, interpret=interpret)
+    return jnp.swapaxes(o, 1, 2)

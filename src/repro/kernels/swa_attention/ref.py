@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the SWA kernel (delegates to the model-level math)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import reference_attention
+
+
+def swa_attention_ref(q, k, v, *, window: int):
+    """Same layout as the kernel: q (B, H, S, hd), k/v (B, Hkv, S, hd)."""
+    o = reference_attention(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=True, window=window)
+    return jnp.swapaxes(o, 1, 2)

@@ -1,0 +1,352 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` visits every computation ONCE — a layer scan
+lowered to a ``while`` with known_trip_count=52 contributes its body only
+once, undercounting FLOPs/bytes/collectives by ~the layer count.  XLA does
+annotate ``backend_config={"known_trip_count":{"n":...}}`` on while ops, so
+this module rebuilds the call graph from the HLO text and propagates
+execution multiplicity:
+
+  mult(ENTRY) = 1
+  while body/condition:  mult ×= known_trip_count (default 1)
+  fusion calls / conditionals / other calls: mult ×= 1
+
+Per-op costs (× multiplicity):
+  - dot:           2 · numel(result) · prod(lhs contracting dims)
+  - convolution:   2 · numel(result) · prod(kernel dims) / out_features
+  - bytes:         operands + result, for materializing ops in non-inlined
+                   computations (fusion bodies are counted at the call site)
+  - collectives:   ring-model wire bytes per device (see roofline.py)
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_OP_LINE = re.compile(r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMMENT = re.compile(r"/\*.*?\*/")
+# first lowercase token followed by '(' that isn't a dtype — dtypes are
+# always followed by '['.  Tuple results / layouts / index comments are
+# stripped or never match this pattern.
+_OP_NAME = re.compile(r"([a-z][a-z0-9\-]*)\(")
+_CALL_REFS = re.compile(r"(?:calls=|to_apply=|condition=|body=)%([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that move no bytes (aliases / metadata)
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+# Ops that materialize HBM traffic on TPU.  The CPU-lowered HLO we analyze
+# has far less fusion than the TPU pipeline would produce — pure elementwise
+# chains (add/mul/convert/exp/...) would be fused into their producers on
+# TPU — so counting every op's operands+results overstates the memory term
+# ~5-10×.  Instead only these op kinds are charged; elementwise/broadcast/
+# reshape/slice traffic is treated as fused.
+_MATERIALIZING_OPS = {
+    "dot", "convolution", "fusion", "copy", "reduce", "reduce-window",
+    "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "concatenate", "sort", "rng", "rng-bit-generator", "custom-call",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "cholesky", "triangular-solve", "fft",
+}
+
+
+def _parse_shape_list(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dtype, dims in _SHAPE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _numel(dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _bytes_of(shapes: List[Tuple[str, Tuple[int, ...]]]) -> int:
+    return sum(_numel(dims) * _DTYPE_BYTES[dt] for dt, dims in shapes)
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_shapes: List[Tuple[str, Tuple[int, ...]]]
+    operands: List[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    params: Dict[str, List[Tuple[str, Tuple[int, ...]]]] = field(default_factory=dict)
+    ops: List[Op] = field(default_factory=list)
+    # symbol table: op/param name -> result shapes
+    symbols: Dict[str, List[Tuple[str, Tuple[int, ...]]]] = field(default_factory=dict)
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        if raw.startswith(("ENTRY", "%")) and "{" in raw and "->" in raw:
+            m = _COMP_HEADER.match(raw)
+            if not m:
+                continue
+            cur = Computation(name=m.group(1))
+            comps[cur.name] = cur
+            if raw.startswith("ENTRY"):
+                entry = cur.name
+            # parameters: "pname: f32[2,3], pname2: ..."
+            for pm in re.finditer(r"([\w\.\-]+):\s*(\(?[a-z0-9\[\],\s]+\)?)",
+                                  m.group(2)):
+                shapes = _parse_shape_list(pm.group(2))
+                cur.params[pm.group(1)] = shapes
+                cur.symbols[pm.group(1)] = shapes
+            continue
+        if cur is None:
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        m = _OP_LINE.match(raw)
+        if not m:
+            continue
+        name, rhs = m.group(1), _COMMENT.sub("", m.group(2))
+        km = _OP_NAME.search(rhs)
+        kind = km.group(1) if km else "unknown"
+        # result shapes: everything before the op kind token
+        head = rhs[:km.start(1)] if km else rhs
+        result_shapes = _parse_shape_list(head)
+        # operands: %refs inside the first (...) after the op name
+        operands = []
+        if km:
+            depth = 0
+            start = rhs.find("(", km.end(1) - 1)
+            if start >= 0:
+                for i in range(start, len(rhs)):
+                    if rhs[i] == "(":
+                        depth += 1
+                    elif rhs[i] == ")":
+                        depth -= 1
+                        if depth == 0:
+                            operands = _OPERANDS.findall(rhs[start:i])
+                            break
+        op = Op(name=name, kind=kind, result_shapes=result_shapes,
+                operands=operands, line=raw)
+        cur.ops.append(op)
+        cur.symbols[name] = result_shapes
+    return comps, entry
+
+
+def _multiplicities(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    """Execution count of each computation, propagated from ENTRY."""
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    if entry not in comps:
+        return mult
+    mult[entry] = 1.0
+    # call edges: (caller, callee, factor)
+    edges: List[Tuple[str, str, float]] = []
+    for cname, comp in comps.items():
+        for op in comp.ops:
+            trip = 1.0
+            if op.kind == "while":
+                tm = _TRIP.search(op.line)
+                trip = float(tm.group(1)) if tm else 1.0
+            for ref in _CALL_REFS.findall(op.line):
+                factor = trip if op.kind == "while" else 1.0
+                edges.append((cname, ref, factor))
+            bm = _BRANCHES.search(op.line)
+            if bm:
+                for ref in _OPERANDS.findall(bm.group(1)):
+                    edges.append((cname, ref, 1.0))
+    # propagate to fixpoint — Jacobi sweeps reading the PREVIOUS sweep's
+    # values (reading the in-progress sweep would make the result depend on
+    # edge order; HLO defines callees before callers, the worst case).
+    # The call graph is a DAG, so this converges in ≤ depth sweeps.
+    for _ in range(64):
+        new = {c: 0.0 for c in comps}
+        new[entry] = 1.0
+        for caller, callee, factor in edges:
+            new[callee] = new.get(callee, 0.0) + mult.get(caller, 0.0) * factor
+        if new == mult:
+            break
+        mult = new
+    return mult
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0                   # per device
+    bytes_accessed: float = 0.0          # per device
+    wire_bytes: float = 0.0              # per device
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    dots: int = 0
+    notes: List[str] = field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "wire_bytes": self.wire_bytes,
+            "collectives": self.collectives,
+            "dots": self.dots,
+        }
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _wire_bytes(kind: str, result_bytes: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    return {
+        "all-gather": result_bytes * (n - 1) / n,
+        "all-reduce": 2.0 * result_bytes * (n - 1) / n,
+        "reduce-scatter": float(result_bytes) * (n - 1),
+        "all-to-all": result_bytes * (n - 1) / n,
+        "collective-permute": float(result_bytes),
+    }[kind]
+
+
+def analyze_hlo(hlo_text: str, *, total_devices: int) -> HloCost:
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        return HloCost(notes=["no ENTRY computation found"])
+    mult = _multiplicities(comps, entry)
+
+    # computations whose op bytes are accounted at the call site (fusions /
+    # reduction lambdas)
+    inlined: set = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            for m in re.finditer(r"(?:calls=|to_apply=)%([\w\.\-]+)", op.line):
+                inlined.add(m.group(1))
+
+    cost = HloCost()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        is_inlined = cname in inlined
+        for op in comp.ops:
+            base = op.kind.removesuffix("-start").removesuffix("-done")
+            # flops: dots count anywhere (incl. fusion bodies)
+            if base == "dot":
+                k = 1
+                lm = _LHS_CONTRACT.search(op.line)
+                if lm and op.operands:
+                    lhs_shapes = comp.symbols.get(op.operands[0]) or []
+                    if lhs_shapes:
+                        dims = lhs_shapes[0][1]
+                        for ci in (int(x) for x in lm.group(1).split(",") if x):
+                            if ci < len(dims):
+                                k *= dims[ci]
+                cost.flops += m * 2.0 * sum(
+                    _numel(d) for _, d in op.result_shapes) * k
+                cost.dots += 1
+            elif base == "convolution":
+                # rough: 2 · numel(out) · numel(kernel) / out_features
+                rhs_shapes = (comp.symbols.get(op.operands[1])
+                              if len(op.operands) > 1 else None) or []
+                kn = _numel(rhs_shapes[0][1]) if rhs_shapes else 1
+                out_n = sum(_numel(d) for _, d in op.result_shapes)
+                ofeat = op.result_shapes[0][1][-1] if op.result_shapes and \
+                    op.result_shapes[0][1] else 1
+                cost.flops += m * 2.0 * out_n * kn / max(ofeat, 1)
+
+            if op.kind.endswith("-done"):
+                continue                       # counted at -start
+            # collectives (only in non-inlined comps; fusions can't hold them)
+            if base in COLLECTIVES:
+                rb = _bytes_of(op.result_shapes)
+                if base == "all-to-all" and len(op.operands) > 1:
+                    # tuple all-to-all: result == inputs
+                    pass
+                n = _group_size(op.line, total_devices)
+                wb = _wire_bytes(base, rb, n)
+                cost.wire_bytes += m * wb
+                d = cost.collectives.setdefault(
+                    f"{base}@g{n}",
+                    {"count": 0.0, "result_bytes": 0.0, "wire_bytes": 0.0})
+                d["count"] += m
+                d["result_bytes"] += m * rb
+                d["wire_bytes"] += m * wb
+
+            # bytes: materializing ops in non-inlined computations
+            if not is_inlined and base in _MATERIALIZING_OPS:
+                rb = _bytes_of(op.result_shapes)
+                # XLA names fusions after the ops they contain: a
+                # "...dynamic-update-slice_fusion" IS a cache update
+                eff = base
+                if base == "fusion":
+                    if "dynamic-update-slice" in op.name or "scatter" in op.name:
+                        eff = "dynamic-update-slice"
+                    elif "dynamic-slice" in op.name or "gather" in op.name:
+                        eff = "dynamic-slice"
+                    elif "convert" in op.name:
+                        # bf16<->f32 converts are an XLA:CPU lowering
+                        # artifact (no native bf16 dot on CPU); on TPU the
+                        # MXU consumes bf16 and the convert fuses away.
+                        # Observed: 87% of mixtral decode bytes.
+                        continue
+                if eff in ("dynamic-slice", "gather"):
+                    # reads only the sliced region, not the whole operand
+                    # (a layer scan dynamic-slicing stacked params would
+                    # otherwise be charged L x the full parameter tree)
+                    bytes_moved = 2 * rb
+                elif eff in ("dynamic-update-slice", "scatter"):
+                    # reads+writes only the update region (result aliases
+                    # the operand).  For a raw op the update is operand 1;
+                    # for a DUS-rooted fusion take the smallest tensor
+                    # operand as the update-size proxy.
+                    if base == "fusion":
+                        cand = [_bytes_of(comp.symbols.get(o) or [])
+                                for o in op.operands]
+                        cand = [c for c in cand if c > 64]
+                        upd = min(cand) if cand else rb
+                    else:
+                        upd = (_bytes_of(comp.symbols.get(op.operands[1]) or [])
+                               if len(op.operands) > 1 else rb)
+                    bytes_moved = 2 * upd
+                else:
+                    ob = 0
+                    for o in op.operands:
+                        ob += _bytes_of(comp.symbols.get(o) or [])
+                    bytes_moved = rb + ob
+                cost.bytes_accessed += m * bytes_moved
+    return cost

@@ -1,0 +1,53 @@
+"""Production meshes (DESIGN.md §4).
+
+Functions, not module constants — importing this module never touches jax
+device state.  The dry-run creates 512 host-platform placeholder devices
+(XLA_FLAGS set in dryrun.py before any jax import); everything else sees
+the container's single real device.
+
+Target hardware: TPU v5e.  Mesh axes:
+  single pod : (16, 16)        ``(data, model)``     = 256 chips
+  multi-pod  : (2, 16, 16)     ``(pod, data, model)`` = 512 chips
+
+``pod`` is the Protocol Learning axis — the slow, inter-pod "internet"
+boundary where the paper's techniques (compression / gossip / robust
+aggregation, core/hierarchical.py) apply.  ``data``/``model`` are the
+fast intra-pod ICI axes driven by ordinary pjit.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh
+
+
+SINGLE_POD_SHAPE = (16, 16)
+SINGLE_POD_AXES = ("data", "model")
+MULTI_POD_SHAPE = (2, 16, 16)
+MULTI_POD_AXES = ("pod", "data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = MULTI_POD_AXES if multi_pod else SINGLE_POD_AXES
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """1×1 mesh over the container's real device(s) — smoke tests/examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), SINGLE_POD_AXES)
+
+
+def axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """Axes the global batch shards over (pod first when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def has_pod_axis(mesh: Mesh) -> bool:
+    return "pod" in mesh.axis_names

@@ -1,0 +1,49 @@
+"""Re-run the HLO cost model over saved dry-run artifacts (no recompile).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze experiments/dryrun ...
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from repro.configs import get_config, get_shape
+from repro.launch import hlo_cost, roofline as rl
+
+
+def reanalyze_dir(out_dir: str) -> int:
+    n = 0
+    for jpath in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        hpath = jpath[:-5] + ".hlo.txt"
+        if not os.path.exists(hpath):
+            continue
+        with open(jpath) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        with open(hpath) as f:
+            hlo = f.read()
+        cost = hlo_cost.analyze_hlo(hlo, total_devices=rec["num_chips"])
+        cfg, shape = get_config(rec["arch"]), get_shape(rec["shape"])
+        roof = rl.Roofline(
+            flops_per_device=cost.flops,
+            bytes_per_device=cost.bytes_accessed,
+            wire_bytes_per_device=cost.wire_bytes,
+            collectives=cost.collectives,
+            model_flops_global=rl.model_flops(cfg, shape),
+            num_chips=rec["num_chips"],
+        )
+        roof.xla_flops = rec["roofline"].get("xla_flops", 0.0)
+        roof.xla_bytes = rec["roofline"].get("xla_bytes", 0.0)
+        rec["roofline"] = roof.to_dict()
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    return n
+
+
+if __name__ == "__main__":
+    for d in sys.argv[1:] or ["experiments/dryrun"]:
+        print(f"{d}: {reanalyze_dir(d)} records re-analyzed")

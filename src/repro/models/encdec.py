@@ -1,0 +1,202 @@
+"""Encoder-decoder backbone for seamless-m4t-medium.  [arXiv:2308.11596]
+
+The audio frontend (mel-spectrogram + conv feature extractor) is STUBBED per
+the assignment carve-out: the encoder consumes precomputed frame embeddings
+(B, S_enc, d) supplied by input_specs().  Everything downstream — conformer-
+style encoder stack, text decoder with causal self-attention + cross
+attention, KV-cached decode — is fully implemented.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (
+    chunked_softmax_xent,
+    dense_init,
+    dtype_of,
+    embed_init,
+    init_swiglu,
+    rms_norm,
+    swiglu,
+    apply_rope,
+)
+from repro.models.transformer import init_attn
+
+Array = jax.Array
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+
+    def init_enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "attn": init_attn(k1, cfg, dtype),
+            "ln_attn": jnp.ones((cfg.d_model,), jnp.float32),
+            "ffn": init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype),
+            "ln_ffn": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+
+    def init_dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "self_attn": init_attn(k1, cfg, dtype),
+            "ln_self": jnp.ones((cfg.d_model,), jnp.float32),
+            "cross_attn": init_attn(k2, cfg, dtype),
+            "ln_cross": jnp.ones((cfg.d_model,), jnp.float32),
+            "ffn": init_swiglu(k3, cfg.d_model, cfg.d_ff, dtype),
+            "ln_ffn": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+
+    enc_keys = jax.random.split(ks[0], cfg.num_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embed": embed_init(ks[2], (cfg.vocab_size, cfg.d_model), dtype),
+        "enc_layers": jax.vmap(init_enc_layer)(enc_keys),
+        "ln_enc_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "dec_layers": jax.vmap(init_dec_layer)(dec_keys),
+        "ln_dec_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "unembed": dense_init(ks[3], (cfg.d_model, cfg.vocab_size), dtype),
+    }
+
+
+def _proj_qkv(p, x):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    return q, k, v
+
+
+def encode(params, cfg: ModelConfig, frames: Array, *, remat: bool = True) -> Array:
+    """frames: (B, S_enc, d) stubbed frontend output -> memory (B, S_enc, d)."""
+    x = frames.astype(dtype_of(cfg))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        q, k, v = _proj_qkv(lp["attn"], h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = attn.attention(q, k, v, causal=False)             # bidirectional
+        x = x + jnp.einsum("bshe,hed->bsd", o, lp["attn"]["wo"])
+        h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+        x = x + swiglu(h, lp["ffn"]["w_gate"], lp["ffn"]["w_up"], lp["ffn"]["w_down"])
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["ln_enc_f"], cfg.norm_eps)
+
+
+def decode_train(params, cfg: ModelConfig, tokens: Array, memory: Array,
+                 *, remat: bool = True) -> Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln_self"], cfg.norm_eps)
+        q, k, v = _proj_qkv(lp["self_attn"], h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = attn.attention(q, k, v, causal=True)
+        x = x + jnp.einsum("bshe,hed->bsd", o, lp["self_attn"]["wo"])
+
+        h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhe->bshe", h, lp["cross_attn"]["wq"])
+        km = jnp.einsum("bsd,dhe->bshe", memory, lp["cross_attn"]["wk"])
+        vm = jnp.einsum("bsd,dhe->bshe", memory, lp["cross_attn"]["wv"])
+        o = attn.attention(q, km, vm, causal=False)
+        x = x + jnp.einsum("bshe,hed->bsd", o, lp["cross_attn"]["wo"])
+
+        h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+        x = x + swiglu(h, lp["ffn"]["w_gate"], lp["ffn"]["w_up"], lp["ffn"]["w_down"])
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return rms_norm(x, params["ln_dec_f"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    memory = encode(params, cfg, batch["frames"])
+    h = decode_train(params, cfg, batch["tokens"], memory)
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones(batch["labels"].shape, jnp.float32)
+    xent = chunked_softmax_xent(h, params["unembed"], batch["labels"], mask, cfg.xent_chunk)
+    return xent, {"xent": xent}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    """Self-attn KV cache + precomputed cross-attention K/V from the memory."""
+    dtype = dtype or dtype_of(cfg)
+    hd = cfg.resolved_head_dim
+    l = cfg.num_layers
+    return {
+        "k": jnp.zeros((l, batch, seq_len, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((l, batch, seq_len, cfg.num_kv_heads, hd), dtype),
+        "cross_k": jnp.zeros((l, batch, cfg.encoder_frames, cfg.num_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((l, batch, cfg.encoder_frames, cfg.num_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def precompute_cross(params, cfg: ModelConfig, memory: Array):
+    """Fill the cross-attention part of the cache from encoder output."""
+    def per_layer(lp):
+        km = jnp.einsum("bsd,dhe->bshe", memory, lp["cross_attn"]["wk"])
+        vm = jnp.einsum("bsd,dhe->bshe", memory, lp["cross_attn"]["wv"])
+        return km, vm
+
+    km, vm = jax.vmap(per_layer)(params["dec_layers"])
+    return km.astype(dtype_of(cfg)), vm.astype(dtype_of(cfg))
+
+
+def decode_step(params, cfg: ModelConfig, tokens: Array, cache):
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(x, inputs):
+        lp, kc, vc, ck, cv = inputs
+        h = rms_norm(x, lp["ln_self"], cfg.norm_eps)
+        positions = jnp.full((x.shape[0], 1), pos)
+        q, k, v = _proj_qkv(lp["self_attn"], h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kc, vc = attn.cache_insert(kc, vc, k, v, pos, ring=False)
+        o = attn.decode_attention(q, kc, vc, pos, ring=False)
+        x = x + jnp.einsum("bshe,hed->bsd", o, lp["self_attn"]["wo"])
+
+        h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhe->bshe", h, lp["cross_attn"]["wq"])
+        o = attn.decode_attention(q, ck, cv, jnp.asarray(ck.shape[1] - 1), ring=False)
+        x = x + jnp.einsum("bshe,hed->bsd", o, lp["cross_attn"]["wo"])
+
+        h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+        x = x + swiglu(h, lp["ffn"]["w_gate"], lp["ffn"]["w_up"], lp["ffn"]["w_down"])
+        return x, (kc, vc)
+
+    x, (knew, vnew) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]))
+    x = rms_norm(x, params["ln_dec_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                        params["unembed"].astype(jnp.float32))
+    return logits, {"k": knew, "v": vnew, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"], "pos": pos + 1}
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    memory = encode(params, cfg, batch["frames"], remat=False)
+    h = decode_train(params, cfg, batch["tokens"], memory, remat=False)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1].astype(jnp.float32),
+                        params["unembed"].astype(jnp.float32))
+    return logits

@@ -1,0 +1,182 @@
+"""Zamba2-style hybrid: Mamba2 backbone with a single SHARED attention block
+applied between groups of mamba layers.  [arXiv:2411.15242]
+
+38 mamba layers with mamba_per_group=6 → 6 groups of 6 (shared attn after
+each group) + 2 remainder mamba layers.  The shared block's weights are the
+same at every application (scan closure), faithful to zamba2's
+parameter-sharing design.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models.common import (
+    chunked_softmax_xent,
+    dtype_of,
+    embed_init,
+    dense_init,
+    init_swiglu,
+    rms_norm,
+    swiglu,
+)
+from repro.models.transformer import init_attn, unembed_of
+
+Array = jax.Array
+
+
+def group_counts(cfg: ModelConfig):
+    g = cfg.num_layers // cfg.mamba_per_group
+    rem = cfg.num_layers - g * cfg.mamba_per_group
+    return g, rem
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = dtype_of(cfg)
+    g, rem = group_counts(cfg)
+    ks = jax.random.split(key, 6)
+
+    def init_m(k):
+        return {
+            "mamba": mamba2.init_mamba_block(k, cfg, dtype),
+            "ln": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+
+    group_keys = jax.random.split(ks[0], g * cfg.mamba_per_group)
+    groups = jax.vmap(init_m)(group_keys)
+    groups = jax.tree.map(lambda t: t.reshape(g, cfg.mamba_per_group, *t.shape[1:]), groups)
+    params = {
+        "embed": embed_init(ks[1], (cfg.vocab_size, cfg.d_model), dtype),
+        "groups": groups,
+        "shared": {
+            "attn": init_attn(ks[2], cfg, dtype),
+            "ln_attn": jnp.ones((cfg.d_model,), jnp.float32),
+            "ffn": init_swiglu(ks[3], cfg.d_model, cfg.d_ff, dtype),
+            "ln_ffn": jnp.ones((cfg.d_model,), jnp.float32),
+        },
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "unembed": dense_init(ks[4], (cfg.d_model, cfg.vocab_size), dtype),
+    }
+    if rem:
+        rem_keys = jax.random.split(ks[5], rem)
+        params["rem"] = jax.vmap(init_m)(rem_keys)
+    return params
+
+
+def _mamba_layer(lp, cfg, x, chunk=256):
+    return x + mamba2.mamba_block_apply(
+        lp["mamba"], cfg, rms_norm(x, lp["ln"], cfg.norm_eps), chunk=chunk)
+
+
+def _shared_attn(shared, cfg, x, positions):
+    from repro.models.transformer import _qkv
+
+    h = rms_norm(x, shared["ln_attn"], cfg.norm_eps)
+    q, k, v = _qkv({"attn": shared["attn"]}, cfg, h, positions)
+    o = attn.attention(q, k, v, causal=True, window=None)
+    x = x + jnp.einsum("bshe,hed->bsd", o, shared["attn"]["wo"])
+    h = rms_norm(x, shared["ln_ffn"], cfg.norm_eps)
+    f = swiglu(h, shared["ffn"]["w_gate"], shared["ffn"]["w_up"], shared["ffn"]["w_down"])
+    return x + f
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat: bool = True):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    b, s = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    shared = params["shared"]
+
+    def inner(carry, lp):
+        return _mamba_layer(lp, cfg, carry), None
+
+    def group_body(x, gp):
+        x, _ = jax.lax.scan(inner, x, gp)
+        x = _shared_attn(shared, cfg, x, positions)
+        return x, None
+
+    if remat:
+        group_body = jax.checkpoint(group_body)
+    x, _ = jax.lax.scan(group_body, x, params["groups"])
+    if "rem" in params:
+        body = jax.checkpoint(inner) if remat else inner
+        x, _ = jax.lax.scan(body, x, params["rem"])
+    return rms_norm(x, params["ln_f"], cfg.norm_eps), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    h, _ = forward(params, cfg, batch)
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones(batch["labels"].shape, jnp.float32)
+    xent = chunked_softmax_xent(h, unembed_of(params), batch["labels"], mask, cfg.xent_chunk)
+    return xent, {"xent": xent}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    dtype = dtype or dtype_of(cfg)
+    g, rem = group_counts(cfg)
+    hd = cfg.resolved_head_dim
+    m = mamba2.init_mamba_cache(cfg, batch, dtype)
+    stack = lambda t, n: jnp.zeros((n, *t.shape), t.dtype)
+    cache = {
+        "mamba_g": jax.tree.map(lambda t: stack(t, g * cfg.mamba_per_group).reshape(
+            g, cfg.mamba_per_group, *t.shape), m),
+        "attn_k": jnp.zeros((g, batch, seq_len, cfg.num_kv_heads, hd), dtype),
+        "attn_v": jnp.zeros((g, batch, seq_len, cfg.num_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if rem:
+        cache["mamba_rem"] = jax.tree.map(lambda t: stack(t, rem), m)
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens: Array, cache):
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    shared = params["shared"]
+    from repro.models.transformer import _qkv
+
+    def inner(x, inputs):
+        lp, c = inputs
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        o, c_new = mamba2.mamba_block_decode(lp["mamba"], cfg, h, c)
+        return x + o, c_new
+
+    def shared_decode(x, kc, vc):
+        h = rms_norm(x, shared["ln_attn"], cfg.norm_eps)
+        positions = jnp.full((x.shape[0], 1), pos)
+        q, k, v = _qkv({"attn": shared["attn"]}, cfg, h, positions)
+        kc, vc = attn.cache_insert(kc, vc, k, v, pos, ring=False)
+        o = attn.decode_attention(q, kc, vc, pos, ring=False)
+        x = x + jnp.einsum("bshe,hed->bsd", o, shared["attn"]["wo"])
+        h = rms_norm(x, shared["ln_ffn"], cfg.norm_eps)
+        f = swiglu(h, shared["ffn"]["w_gate"], shared["ffn"]["w_up"], shared["ffn"]["w_down"])
+        return x + f, kc, vc
+
+    def group_body(x, inputs):
+        gp, gc, kc, vc = inputs
+        x, gc_new = jax.lax.scan(inner, x, (gp, gc))
+        x, kc, vc = shared_decode(x, kc, vc)
+        return x, (gc_new, kc, vc)
+
+    x, (mg_new, k_new, v_new) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], cache["mamba_g"], cache["attn_k"], cache["attn_v"]))
+    new_cache = {"mamba_g": mg_new, "attn_k": k_new, "attn_v": v_new, "pos": pos + 1}
+    if "rem" in params:
+        x, rem_new = jax.lax.scan(inner, x, (params["rem"], cache["mamba_rem"]))
+        new_cache["mamba_rem"] = rem_new
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                        unembed_of(params).astype(jnp.float32))
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    h, _ = forward(params, cfg, batch, remat=False)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1].astype(jnp.float32),
+                        unembed_of(params).astype(jnp.float32))
+    return logits

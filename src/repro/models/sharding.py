@@ -1,0 +1,239 @@
+"""Sharding rules: map every parameter / cache / batch leaf to a PartitionSpec.
+
+Baseline layout (2-D mesh ``(data, model)``; multi-pod adds a leading ``pod``
+axis used for pure data parallelism — the Protocol Learning axis):
+
+- weights are fully sharded over BOTH axes (tensor-parallel over ``model``,
+  FSDP-style over ``data``) so optimizer state fits:  train state is
+  ~12 bytes/param spread over all chips of a pod.
+- batch shards over ``data`` (and ``pod`` when present), heads/ffn/experts
+  over ``model``.
+- KV caches: kv-heads over ``model`` when divisible, otherwise the cache
+  *sequence* axis shards over ``model`` (MQA, e.g. granite kv=1).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+# -- activation sharding hints -------------------------------------------------
+# Set by the launch layer (dryrun/train) while tracing under a mesh context;
+# None (the default, used by CPU tests/examples) means "no constraints".
+# When set, models pin their activation batch dim to these axes so XLA's
+# SPMD propagation can never silently un-shard the batch (observed: the
+# vmap'd MoE dispatch scatter replicated the global batch on every device —
+# EXPERIMENTS.md §Perf mixtral iteration 1).
+_ACT_BATCH_AXES = None
+_ACT_MODEL_AXIS = None
+_ACT_MODEL_SIZE = 1
+
+
+class activation_sharding:
+    """Context manager: ``with activation_sharding(("pod", "data")): ...``"""
+
+    def __init__(self, batch_axes, model_axis: str = "model",
+                 model_axis_size: int = 1):
+        self.batch_axes = tuple(batch_axes) if batch_axes else None
+        self.model_axis = model_axis
+        self.model_axis_size = model_axis_size
+
+    def __enter__(self):
+        global _ACT_BATCH_AXES, _ACT_MODEL_AXIS, _ACT_MODEL_SIZE
+        self._prev = (_ACT_BATCH_AXES, _ACT_MODEL_AXIS, _ACT_MODEL_SIZE)
+        _ACT_BATCH_AXES = self.batch_axes
+        _ACT_MODEL_AXIS = self.model_axis
+        _ACT_MODEL_SIZE = self.model_axis_size
+        return self
+
+    def __exit__(self, *exc):
+        global _ACT_BATCH_AXES, _ACT_MODEL_AXIS, _ACT_MODEL_SIZE
+        _ACT_BATCH_AXES, _ACT_MODEL_AXIS, _ACT_MODEL_SIZE = self._prev
+        return False
+
+
+def model_axis_size() -> int:
+    return _ACT_MODEL_SIZE
+
+
+def constrain_batch(x, ndim_batch: int = 1):
+    """Pin the leading batch dim(s) of an activation to the configured axes."""
+    if _ACT_BATCH_AXES is None:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = _ACT_BATCH_AXES
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_ffn(x):
+    """Pin the trailing FFN dim to the model axis (keeps f-sharded expert
+    weights resident — without it XLA all-gathers 10.9 GB of expert
+    weights PER DECODE TOKEN on mixtral; EXPERIMENTS.md §Perf pair A3)."""
+    if _ACT_MODEL_AXIS is None or _ACT_BATCH_AXES is None:
+        return x
+    spec = [None] * (x.ndim - 1) + [_ACT_MODEL_AXIS]
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _keystr(path) -> list:
+    out = []
+    for e in path:
+        if hasattr(e, "key"):
+            out.append(str(e.key))
+        elif hasattr(e, "idx"):
+            out.append(str(e.idx))
+    return out
+
+
+# base (unstacked) spec per parameter name; d->data, m->model, .->None
+_BASE_RULES = {
+    "embed": ("m", "d"),
+    "unembed": ("d", "m"),
+    "wq": ("d", "m?h", "."),
+    "wk": ("d", "m?h", "."),
+    "wv": ("d", "m?h", "."),
+    "wo": ("m?h", ".", "d"),
+    "router": ("d", "."),
+    "in_proj": ("d", "m"),
+    "out_proj": ("m", "d"),
+    "conv_w": (".", "m"),
+    "w_r": ("d", "m"),
+    "w_k": ("d", "m"),
+    "w_v": ("d", "m"),
+    "w_g": ("d", "m"),
+    "w_o": ("m", "d"),
+    "cm_k": ("d", "m"),
+    "cm_v": ("m", "d"),
+    "cm_r": ("d", "m"),
+    "w_decay_a": ("d", "."),
+    "w_decay_b": (".", "m"),
+}
+_DENSE_FFN = {"w_gate": ("d", "m"), "w_up": ("d", "m"), "w_down": ("m", "d")}
+_MOE_FFN_E = {"w_gate": ("m", "d", "."), "w_up": ("m", "d", "."), "w_down": ("m", ".", "d")}
+_MOE_FFN_F = {"w_gate": (".", "d", "m"), "w_up": (".", "d", "m"), "w_down": (".", "m", "d")}
+
+
+def _resolve(rule, shape, sizes, data_axis, model_axis):
+    """Turn a symbolic rule into a PartitionSpec, honouring divisibility."""
+    spec = []
+    for sym, dim in zip(rule, shape):
+        if sym == "d":
+            spec.append(data_axis if dim % sizes[data_axis] == 0 else None)
+        elif sym == "m":
+            spec.append(model_axis if dim % sizes[model_axis] == 0 else None)
+        elif sym == "m?h":  # heads: shard only when divisible
+            spec.append(model_axis if dim % sizes[model_axis] == 0 else None)
+        else:
+            spec.append(None)
+    return spec
+
+
+def param_pspecs(shapes_tree, cfg: ModelConfig, sizes: Dict[str, int],
+                 data_axis: str = "data", model_axis: str = "model"):
+    """shapes_tree: pytree of ShapeDtypeStruct (from Model.param_shapes())."""
+    moe_rule = (
+        _MOE_FFN_E if cfg.num_experts and cfg.num_experts % sizes[model_axis] == 0
+        else _MOE_FFN_F
+    )
+
+    def leaf_spec(path, leaf):
+        keys = _keystr(path)
+        name = keys[-1]
+        shape = leaf.shape
+        if name in ("w_gate", "w_up", "w_down"):
+            rule = moe_rule[name] if "moe" in keys else _DENSE_FFN[name]
+        elif name in _BASE_RULES:
+            rule = _BASE_RULES[name]
+        else:
+            rule = ()
+        if not rule:
+            return P()                                   # replicate (norms, scalars)
+        base_rank = len(rule)
+        lead = len(shape) - base_rank                    # stacked layer axes
+        spec = [None] * lead + _resolve(rule, shape[lead:], sizes, data_axis, model_axis)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, shapes_tree)
+
+
+def batch_pspecs(batch_tree, sizes: Dict[str, int], data_axis: str = "data",
+                 extra_batch_axes: tuple = ()):
+    """Shard the leading batch dim over data (+pod) axes when divisible."""
+    axes = tuple(a for a in (*extra_batch_axes, data_axis))
+    total = 1
+    for a in axes:
+        total *= sizes[a]
+
+    def leaf_spec(path, leaf):
+        keys = _keystr(path)
+        shape = leaf.shape
+        if keys and keys[-1] == "positions":             # (3, B, S)
+            ok = shape[1] % total == 0
+            return P(None, axes if ok else None, None)
+        bdim = shape[0] if shape else 1
+        ok = shape and bdim % total == 0
+        spec = [axes if ok else None] + [None] * (len(shape) - 1)
+        return P(*spec) if shape else P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_tree)
+
+
+def cache_pspecs(cache_tree, cfg: ModelConfig, sizes: Dict[str, int],
+                 data_axis: str = "data", model_axis: str = "model",
+                 extra_batch_axes: tuple = ()):
+    """KV caches / recurrent state sharding for decode."""
+    baxes = tuple(a for a in (*extra_batch_axes, data_axis))
+    btotal = 1
+    for a in baxes:
+        btotal *= sizes[a]
+    m = sizes[model_axis]
+
+    def leaf_spec(path, leaf):
+        keys = _keystr(path)
+        name = keys[-1]
+        shape = leaf.shape
+        if name == "pos" or not shape:
+            return P()
+        if name in ("k", "v", "cross_k", "cross_v", "attn_k", "attn_v"):
+            # (..., B, S, Hkv, hd) with 1-2 leading stack axes
+            lead = len(shape) - 4
+            b, s, h, _ = shape[lead:]
+            bspec = baxes if b % btotal == 0 else None
+            if h % m == 0:
+                spec = [None] * lead + [bspec, None, model_axis, None]
+            elif s % m == 0:
+                spec = [None] * lead + [bspec, model_axis, None, None]
+            else:
+                spec = [None] * lead + [bspec, None, None, None]
+            return P(*spec)
+        if name == "h":                                  # mamba state (..., B, H, P, N)
+            lead = len(shape) - 4
+            b, h = shape[lead], shape[lead + 1]
+            spec = [None] * lead + [baxes if b % btotal == 0 else None,
+                                    model_axis if h % m == 0 else None, None, None]
+            return P(*spec)
+        if name == "s":                                  # rwkv state (L, B, H, K, K)
+            lead = len(shape) - 4
+            b, h = shape[lead], shape[lead + 1]
+            spec = [None] * lead + [baxes if b % btotal == 0 else None,
+                                    model_axis if h % m == 0 else None, None, None]
+            return P(*spec)
+        if name == "conv":                               # (..., B, W-1, C)
+            lead = len(shape) - 3
+            b, _, c = shape[lead:]
+            spec = [None] * lead + [baxes if b % btotal == 0 else None, None,
+                                    model_axis if c % m == 0 else None]
+            return P(*spec)
+        if name in ("x_tm", "x_cm"):                     # (L, B, d)
+            b, d = shape[-2], shape[-1]
+            spec = [None] * (len(shape) - 2) + [baxes if b % btotal == 0 else None,
+                                                model_axis if d % m == 0 else None]
+            return P(*spec)
+        # fallback: shard nothing
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)

@@ -1,0 +1,212 @@
+"""Decoder-only transformer backbone (dense / MoE / VLM families).
+
+Layers are stacked (leading axis L) and applied with lax.scan so the HLO is
+depth-independent; each layer body is rematerialized in the loss path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MOE, VLM, ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.common import (
+    apply_mrope,
+    apply_rope,
+    chunked_softmax_xent,
+    dense_init,
+    dtype_of,
+    embed_init,
+    rms_norm,
+)
+
+Array = jax.Array
+
+
+# -- parameter init ----------------------------------------------------------
+def init_attn(key, cfg: ModelConfig, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, cfg.num_heads, hd), dtype),
+        "wk": dense_init(ks[1], (d, cfg.num_kv_heads, hd), dtype),
+        "wv": dense_init(ks[2], (d, cfg.num_kv_heads, hd), dtype),
+        "wo": dense_init(ks[3], (cfg.num_heads, hd, d), dtype),
+    }
+
+
+def init_layer(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "attn": init_attn(ks[0], cfg, dtype),
+        "ln_attn": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln_ffn": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.family == MOE:
+        p["moe"] = moe_lib.init_moe(ks[1], cfg.d_model, cfg.d_ff, cfg.num_experts, dtype)
+    else:
+        from repro.models.common import init_swiglu
+
+        p["ffn"] = init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = dtype_of(cfg)
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": embed_init(k_emb, (cfg.vocab_size, cfg.d_model), dtype),
+        "layers": layers,
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(k_out, (cfg.d_model, cfg.vocab_size), dtype)
+    return params
+
+
+def unembed_of(params):
+    return params.get("unembed", params["embed"].T)
+
+
+# -- layer application -------------------------------------------------------
+def _qkv(layer, cfg, x, positions):
+    q = jnp.einsum("bsd,dhe->bshe", x, layer["attn"]["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, layer["attn"]["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, layer["attn"]["wv"])
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def layer_apply(layer, cfg: ModelConfig, x: Array, positions) -> tuple[Array, Array]:
+    """Full-sequence layer.  Returns (x, moe_aux_loss)."""
+    h = rms_norm(x, layer["ln_attn"], cfg.norm_eps)
+    q, k, v = _qkv(layer, cfg, h, positions)
+    o = attn.attention(q, k, v, causal=True, window=cfg.sliding_window,
+                       use_pallas=cfg.use_pallas_kernels)
+    x = x + jnp.einsum("bshe,hed->bsd", o, layer["attn"]["wo"])
+
+    h = rms_norm(x, layer["ln_ffn"], cfg.norm_eps)
+    if cfg.family == MOE:
+        f, aux = moe_lib.moe_ffn(
+            h, layer["moe"], top_k=cfg.experts_per_token,
+            capacity_factor=cfg.moe_capacity_factor)
+    else:
+        from repro.models.common import swiglu
+
+        f = swiglu(h, layer["ffn"]["w_gate"], layer["ffn"]["w_up"], layer["ffn"]["w_down"])
+        aux = jnp.zeros((), jnp.float32)
+    return x + f, aux
+
+
+def layer_decode(layer, cfg: ModelConfig, x: Array, kcache, vcache, pos) -> tuple[Array, Array, Array]:
+    """One-token layer step.  x: (B, 1, d); kcache/vcache: (B, L, Hkv, hd)."""
+    ring = cfg.sliding_window is not None
+    h = rms_norm(x, layer["ln_attn"], cfg.norm_eps)
+    positions = jnp.full((x.shape[0], 1), pos)
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(pos, (3, x.shape[0], 1))
+    q, k, v = _qkv(layer, cfg, h, positions)
+    kcache, vcache = attn.cache_insert(kcache, vcache, k, v, pos, ring=ring)
+    o = attn.decode_attention(q, kcache, vcache, pos, ring=ring)
+    x = x + jnp.einsum("bshe,hed->bsd", o, layer["attn"]["wo"])
+
+    h = rms_norm(x, layer["ln_ffn"], cfg.norm_eps)
+    if cfg.family == MOE:
+        f, _ = moe_lib.moe_ffn(
+            h, layer["moe"], top_k=cfg.experts_per_token,
+            capacity_factor=float(cfg.num_experts) / max(cfg.experts_per_token, 1))
+    else:
+        from repro.models.common import swiglu
+
+        f = swiglu(h, layer["ffn"]["w_gate"], layer["ffn"]["w_up"], layer["ffn"]["w_down"])
+    return x + f, kcache, vcache
+
+
+# -- full model --------------------------------------------------------------
+def _positions_for(cfg, batch, seq):
+    if cfg.mrope_sections is not None:
+        return batch["positions"]                    # (3, B, S) provided (M-RoPE)
+    b = batch["tokens"].shape[0]
+    return jnp.broadcast_to(jnp.arange(seq)[None], (b, seq))
+
+
+def embed_inputs(params, cfg: ModelConfig, batch) -> Array:
+    tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.family == VLM and cfg.num_media_tokens:
+        media = batch["media"].astype(tok.dtype)     # (B, M, d) stubbed frontend
+        tok = jnp.concatenate([media, tok], axis=1)
+    return tok
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat: bool = True):
+    """Returns final hidden states (B, S, d) and total moe aux loss."""
+    x = embed_inputs(params, cfg, batch)
+    positions = _positions_for(cfg, batch, x.shape[1])
+
+    def body(carry, layer):
+        x, aux = carry
+        x2, a = layer_apply(layer, cfg, x, positions)
+        return (x2, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    h, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+        if cfg.family == VLM and cfg.num_media_tokens:
+            mask = mask.at[:, : cfg.num_media_tokens].set(0.0)
+    xent = chunked_softmax_xent(h, unembed_of(params), labels, mask, cfg.xent_chunk)
+    return xent + cfg.router_aux_loss_coef * aux, {"xent": xent, "moe_aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    dtype = dtype or dtype_of(cfg)
+    lc = attn.cache_length(seq_len, cfg.sliding_window)
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, lc, cfg.num_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, tokens: Array, cache):
+    """tokens: (B, 1) -> logits (B, 1, V), new cache."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(x, inputs):
+        layer, kc, vc = inputs
+        x, kc, vc = layer_decode(layer, cfg, x, kc, vc, pos)
+        return x, (kc, vc)
+
+    x, (knew, vnew) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                        unembed_of(params).astype(jnp.float32))
+    return logits, {"k": knew, "v": vnew, "pos": pos + 1}
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    """Teacher-forced full forward returning last-position logits (serving path)."""
+    h, _ = forward(params, cfg, batch, remat=False)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1].astype(jnp.float32),
+                        unembed_of(params).astype(jnp.float32))
+    return logits

@@ -1,0 +1,108 @@
+"""Optimizers + schedules (pure JAX; no optax dependency).
+
+AdamW with decoupled weight decay and global-norm clipping; SGD(+momentum)
+for the swarm demos.  Optimizer state is a pytree mirroring params, so the
+same sharding rules apply (m/v shard exactly like their parameter).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamState(NamedTuple):
+    step: Array
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[Array], Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamState:
+        zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+        return AdamState(step=jnp.zeros((), jnp.int32), m=zeros(params), v=zeros(params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdamState, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm is not None:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mu, g: b1 * mu + (1 - b1) * g, state.m, grads)
+        v = jax.tree.map(lambda nu, g: b2 * nu + (1 - b2) * g * g, state.v, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, mu, nu):
+            u = (mu / bc1) / (jnp.sqrt(nu / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamState(step=step, m=m, v=v)
+
+
+class SGDState(NamedTuple):
+    step: Array
+    momentum: Any
+
+
+@dataclass(frozen=True)
+class SGD:
+    lr: Callable[[Array], Array] | float = 0.1
+    momentum: float = 0.9
+    clip_norm: Optional[float] = None
+
+    def init(self, params) -> SGDState:
+        return SGDState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+        )
+
+    def update(self, grads, state: SGDState, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm is not None:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        mom = jax.tree.map(lambda m, g: self.momentum * m + g, state.momentum, grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, mom)
+        return new_params, SGDState(step=step, momentum=mom)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak_lr + (1 - floor) * peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, warm, cos)
+    return lr

@@ -1,0 +1,29 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the real single
+CPU device; multi-device paths (pipeline, dry-run) shell out with their own
+flags (DESIGN.md §4)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_quadratic_problem(n_params: int = 8):
+    """A convex toy problem for swarm/optimizer tests: loss = ||Wx - y||²."""
+    key = jax.random.PRNGKey(42)
+    k1, k2 = jax.random.split(key)
+    target = jax.random.normal(k1, (n_params,))
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean(jnp.square(pred - batch["x"] @ target))
+
+    def data_fn(node_idx: int, rnd: int):
+        k = jax.random.fold_in(jax.random.fold_in(k2, rnd), node_idx)
+        return {"x": jax.random.normal(k, (16, n_params))}
+
+    params0 = {"w": jnp.zeros((n_params,))}
+    return loss_fn, params0, data_fn, target

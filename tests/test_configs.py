@@ -1,0 +1,99 @@
+"""Config registry: the 10 assigned architectures carry their exact specs."""
+import pytest
+
+from repro.configs import (
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    REGISTRY,
+    applicable_shapes,
+    get_config,
+)
+
+# (arch, layers, d_model, heads, kv_heads, d_ff, vocab)
+ASSIGNED_SPECS = [
+    ("stablelm-3b", 32, 2560, 32, 32, 6912, 50304),
+    ("mixtral-8x7b", 32, 4096, 32, 8, 14336, 32000),
+    ("h2o-danube-1.8b", 24, 2560, 32, 8, 6912, 32000),
+    ("zamba2-1.2b", 38, 2048, 32, 32, 8192, 32000),
+    ("rwkv6-1.6b", 24, 2048, None, None, 7168, 65536),
+    ("qwen2-vl-2b", 28, 1536, 12, 2, 8960, 151936),
+    ("granite-20b", 52, 6144, 48, 1, 24576, 49152),
+    ("tinyllama-1.1b", 22, 2048, 32, 4, 5632, 32000),
+    ("qwen3-moe-30b-a3b", 48, 2048, 32, 4, 768, 151936),
+    ("seamless-m4t-medium", 12, 1024, 16, 16, 4096, 256206),
+]
+
+
+@pytest.mark.parametrize("arch,L,d,h,kv,ff,v", ASSIGNED_SPECS)
+def test_assigned_dims(arch, L, d, h, kv, ff, v):
+    cfg = get_config(arch)
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    if h is not None:
+        assert cfg.num_heads == h
+        assert cfg.num_kv_heads == kv
+
+
+def test_all_assigned_present():
+    assert sorted(ASSIGNED_ARCHS) == sorted(a for a, *_ in ASSIGNED_SPECS)
+
+
+def test_moe_configs():
+    mix = get_config("mixtral-8x7b")
+    assert (mix.num_experts, mix.experts_per_token) == (8, 2)
+    assert mix.sliding_window is not None          # SWA per [2401.04088]
+    q3 = get_config("qwen3-moe-30b-a3b")
+    assert (q3.num_experts, q3.experts_per_token) == (128, 8)
+
+
+def test_ssm_hybrid_configs():
+    z = get_config("zamba2-1.2b")
+    assert z.family == "hybrid" and z.ssm_state_size == 64
+    r = get_config("rwkv6-1.6b")
+    assert r.family == "ssm" and r.attention_free
+
+
+def test_param_counts_in_band():
+    """Analytic N within ±40% of the marketing size (arch names are loose)."""
+    expect = {
+        "stablelm-3b": 3e9, "mixtral-8x7b": 46e9, "h2o-danube-1.8b": 1.8e9,
+        "zamba2-1.2b": 1.2e9, "rwkv6-1.6b": 1.6e9, "qwen2-vl-2b": 2e9,
+        "granite-20b": 20e9, "tinyllama-1.1b": 1.1e9,
+        "qwen3-moe-30b-a3b": 30e9, "seamless-m4t-medium": 1.2e9,
+    }
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert 0.6 * n < got < 1.6 * n, f"{arch}: {got:.2e} vs {n:.2e}"
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    active = cfg.active_param_count()
+    assert active < 0.25 * cfg.param_count()       # A3B: ~3B of 30B active
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+
+
+def test_long_decode_applicability():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §3)."""
+    runs_long = {a for a in ASSIGNED_ARCHS
+                 if "long_500k" in applicable_shapes(get_config(a))}
+    assert runs_long == {"mixtral-8x7b", "h2o-danube-1.8b", "zamba2-1.2b",
+                         "rwkv6-1.6b"}
+
+
+def test_reduced_configs_are_small():
+    for arch in ASSIGNED_ARCHS:
+        red = get_config(arch).reduced()
+        assert red.num_layers == 2 and red.d_model <= 512
+        if red.num_experts:
+            assert red.num_experts <= 4
+        assert red.family == get_config(arch).family

@@ -1,0 +1,220 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# -- swa_attention --------------------------------------------------------------
+from repro.kernels.swa_attention.ops import swa_attention
+from repro.kernels.swa_attention.ref import swa_attention_ref
+from repro.models.attention import reference_attention
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,hd,window,bq", [
+    (1, 256, 4, 2, 32, 64, 64),
+    (2, 128, 2, 1, 64, 32, 64),      # window < block_q (regression: coverage)
+    (1, 256, 4, 4, 32, 96, 64),      # window not a multiple of block_q
+    (1, 512, 8, 2, 64, 128, 128),
+    (2, 128, 8, 8, 16, 128, 64),     # window == seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_attention_kernel(b, s, hq, hkv, hd, window, bq, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, hd), dtype)
+    out = swa_attention(q, k, v, window=window, block_q=bq, interpret=True)
+    ref = reference_attention(q, k, v, causal=True, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_swa_kernel_layout_ref_agrees():
+    """ref.py's (B,H,S,hd) layout oracle == model-level math."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 4, 64, 16))
+    k = jax.random.normal(ks[1], (1, 2, 64, 16))
+    v = jax.random.normal(ks[2], (1, 2, 64, 16))
+    a = swa_attention_ref(q, k, v, window=32)
+    b = jnp.swapaxes(reference_attention(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=True, window=32), 1, 2)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+# -- qsgd ------------------------------------------------------------------------
+from repro.kernels.qsgd.ops import qsgd_encode, qsgd_roundtrip
+from repro.kernels.qsgd.ref import qsgd_roundtrip_ref
+
+
+@pytest.mark.parametrize("shape", [(1000,), (128, 128), (7,), (3, 5, 17)])
+@pytest.mark.parametrize("levels", [16, 64, 127])
+def test_qsgd_kernel_bit_exact(shape, levels):
+    """The int8 CODES are bit-exact vs the oracle (the §4.2 verification
+    requirement); the decoded floats agree to 1 ulp (fusion order differs)."""
+    from repro.kernels.qsgd.ops import _to_lanes, qsgd_encode
+    from repro.kernels.qsgd.ref import qsgd_encode_ref
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), shape) * 3
+    q_k, norm = qsgd_encode(key, x, levels=levels, interpret=True)
+    x2d, _ = _to_lanes(x)
+    rnd = jax.random.uniform(key, x2d.shape, jnp.float32)
+    q_r = qsgd_encode_ref(x2d, rnd, jnp.linalg.norm(x2d), levels=levels)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    a = qsgd_roundtrip(key, x, levels=levels, interpret=True)
+    b = qsgd_roundtrip_ref(key, x, levels=levels)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_qsgd_unbiased():
+    """E[decode(encode(x))] == x (statistical, many keys)."""
+    x = jnp.array([0.3, -1.7, 0.001, 4.0, -0.25])
+    acc = jnp.zeros_like(x)
+    n = 300
+    for i in range(n):
+        acc += qsgd_roundtrip(jax.random.PRNGKey(i), x, levels=4,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(acc / n), np.asarray(x),
+                               rtol=0.15, atol=0.05)
+
+
+def test_qsgd_codes_fit_int8():
+    q, _ = qsgd_encode(jax.random.PRNGKey(0),
+                       jax.random.normal(jax.random.PRNGKey(1), (512,)),
+                       levels=127, interpret=True)
+    assert q.dtype == jnp.int8
+
+
+# -- centered_clip ---------------------------------------------------------------
+from repro.core.aggregation import centered_clip as cc_ref
+from repro.kernels.centered_clip.ops import centered_clip as cc_kernel
+
+
+@pytest.mark.parametrize("n,d", [(8, 4096), (16, 1000), (5, 257), (32, 128)])
+@pytest.mark.parametrize("tau,iters", [(1.0, 3), (0.5, 1), (10.0, 5)])
+def test_centered_clip_kernel(n, d, tau, iters):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d)) * 2 + 1
+    a = cc_kernel(x, clip_tau=tau, iters=iters, interpret=True)
+    b = cc_ref(x, clip_tau=tau, iters=iters)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_centered_clip_kernel_robust_to_outlier():
+    """With a robust warm start (as [27] warm-starts from the previous
+    aggregate), an unbounded attacker moves v by at most τ per iteration."""
+    honest = jax.random.normal(jax.random.PRNGKey(0), (9, 512)) * 0.1 + 1.0
+    attack = jnp.full((1, 512), 1e6)
+    x = jnp.concatenate([honest, attack])
+    v0 = jnp.median(x, axis=0)
+    v = cc_kernel(x, clip_tau=1.0, iters=5, v0=v0, interpret=True)
+    assert float(jnp.max(jnp.abs(v - 1.0))) < 1.0      # attacker bounded
+
+
+# -- mamba2_scan -----------------------------------------------------------------
+from repro.kernels.mamba2_scan.ops import ssd_chunked_pallas
+from repro.models.mamba2 import ssd_chunked, ssd_reference
+
+
+@pytest.mark.parametrize("bsz,s,h,p,n,chunk", [
+    (2, 64, 3, 16, 8, 16),
+    (1, 128, 2, 32, 16, 32),
+    (1, 60, 1, 8, 4, 16),            # seq not a multiple of chunk
+])
+def test_mamba2_scan_kernel(bsz, s, h, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (bsz, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    b = jax.random.normal(ks[3], (bsz, s, n)) * 0.5
+    c = jax.random.normal(ks[4], (bsz, s, n)) * 0.5
+    d = jnp.ones((h,)) * 0.5
+    y_ref, h_ref = ssd_reference(x, dt, a, b, c, d)
+    y_k, h_k = ssd_chunked_pallas(x, dt, a, b, c, d, chunk=chunk,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_mamba2_model_chunked_matches_reference():
+    """The model-level chunked scan is itself validated vs token-by-token."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    bsz, s, h, p, n = 2, 48, 2, 8, 4
+    x = jax.random.normal(ks[0], (bsz, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    b = jax.random.normal(ks[3], (bsz, s, n)) * 0.5
+    c = jax.random.normal(ks[4], (bsz, s, n)) * 0.5
+    d = jnp.zeros((h,))
+    y1, h1 = ssd_chunked(x, dt, a, b, c, d, chunk=16)
+    y2, h2 = ssd_reference(x, dt, a, b, c, d)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+
+
+# -- rwkv6_wkv -------------------------------------------------------------------
+from repro.kernels.rwkv6_wkv.ops import wkv_chunked_pallas
+from repro.models.rwkv6 import wkv_chunked, wkv_reference
+
+
+@pytest.mark.parametrize("bsz,s,h,dk,chunk", [
+    (2, 64, 2, 16, 16),
+    (1, 96, 3, 32, 32),
+    (1, 40, 1, 8, 16),               # seq not a multiple of chunk
+])
+def test_rwkv6_wkv_kernel(bsz, s, h, dk, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = jax.random.normal(ks[0], (bsz, s, h, dk)) * 0.5
+    k = jax.random.normal(ks[1], (bsz, s, h, dk)) * 0.5
+    v = jax.random.normal(ks[2], (bsz, s, h, dk))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (bsz, s, h, dk)) - 1) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (h, dk)) * 0.1
+    y_ref, s_ref = wkv_reference(r, k, v, w, u)
+    y_k, s_k = wkv_chunked_pallas(r, k, v, w, u, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_rwkv6_model_chunked_matches_reference():
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    bsz, s, h, dk = 1, 48, 2, 8
+    r = jax.random.normal(ks[0], (bsz, s, h, dk)) * 0.5
+    k = jax.random.normal(ks[1], (bsz, s, h, dk)) * 0.5
+    v = jax.random.normal(ks[2], (bsz, s, h, dk))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (bsz, s, h, dk))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (h, dk)) * 0.1
+    y1, s1 = wkv_chunked(r, k, v, w, u, chunk=16)
+    y2, s2 = wkv_reference(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+
+
+# -- model-level kernel integration (inference paths) ----------------------------
+import dataclasses
+
+from repro.configs import get_config
+from repro.models.model import build_model
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "rwkv6-1.6b",
+                                  "zamba2-1.2b"])
+def test_model_prefill_with_pallas_kernels_matches_jnp(arch):
+    """cfg.use_pallas_kernels swaps the SWA / WKV / SSD compute for the
+    Pallas kernels (interpret mode on CPU); prefill logits must match the
+    pure-jnp path."""
+    cfg = get_config(arch).reduced()
+    model_jnp = build_model(cfg)
+    model_krn = build_model(dataclasses.replace(cfg, use_pallas_kernels=True))
+    params = model_jnp.init(jax.random.PRNGKey(0))
+    batch = model_jnp.concrete_batch(jax.random.PRNGKey(1), 2, 64)
+    a = model_jnp.prefill(params, batch)
+    b = model_krn.prefill(params, batch)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,325 @@
+"""Launch layer: train step correctness, microbatch equivalence, serving,
+protocol server, checkpointing, data pipeline, HLO cost model, and the
+multi-pod dry-run (subprocess with its own XLA_FLAGS)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, lm_batch, model_batch, sample_tokens
+from repro.launch import mesh as mesh_lib
+from repro.launch.train import TrainOptions, TrainState, make_train_step
+from repro.models.model import build_model
+from repro.optim.optimizer import AdamW
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ------------------------------ train step -------------------------------------
+def test_train_step_reduces_loss(tiny_model):
+    cfg, model, params = tiny_model
+    opt = AdamW(lr=3e-3)
+    mesh = mesh_lib.make_host_mesh()
+    step = jax.jit(make_train_step(model, opt, mesh))
+    state = TrainState(params, opt.init(params))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    losses = []
+    for i in range(15):
+        state, m = step(state, model_batch(cfg, dcfg, i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_microbatch_grad_equivalence(tiny_model):
+    """Accumulated microbatch gradients == full-batch gradients."""
+    cfg, model, params = tiny_model
+    opt = AdamW(lr=0.0, weight_decay=0.0, clip_norm=None)
+    mesh = mesh_lib.make_host_mesh()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    batch = model_batch(cfg, dcfg, 0)
+
+    from repro.launch.train import _grad_fn
+    l1, g1 = jax.jit(_grad_fn(model, 1))(params, batch)
+    l4, g4 = jax.jit(_grad_fn(model, 4))(params, batch)
+    assert float(l1) == pytest.approx(float(l4), rel=1e-4)
+    flat1 = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                             for x in jax.tree.leaves(g1)])
+    flat4 = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                             for x in jax.tree.leaves(g4)])
+    np.testing.assert_allclose(np.asarray(flat1), np.asarray(flat4),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_train_cli_runs():
+    from repro.launch.train import main
+    main(["--arch", "protocol-125m", "--steps", "3", "--batch", "2",
+          "--seq", "32", "--log-every", "10"])
+
+
+def test_pod_sync_registry_and_identity():
+    """Every pod-sync mode runs under shard_map; at pod-size 1 each is an
+    identity (all_gather of one, mean of one, one-neighbour gossip)."""
+    from repro.core.hierarchical import POD_SYNC
+    mesh = jax.make_mesh((1,), ("pod",))
+    grads = {"w": jnp.arange(8.0).reshape(2, 4), "b": jnp.ones((3,))}
+    for name, fn in POD_SYNC.items():
+        if name == "gossip":
+            continue                      # ring needs >= 2 members
+        out = jax.jit(jax.shard_map(
+            lambda g: fn(g, "pod"), mesh=mesh,
+            in_specs=(jax.sharding.PartitionSpec(),),
+            out_specs=jax.sharding.PartitionSpec(),
+            check_vma=False))(grads)
+        for k in grads:
+            np.testing.assert_allclose(np.asarray(out[k]),
+                                       np.asarray(grads[k]),
+                                       rtol=2e-2, atol=2e-2, err_msg=name)
+
+
+# ------------------------------ serving ----------------------------------------
+def test_greedy_decode_serves(tiny_model):
+    cfg, model, params = tiny_model
+    from repro.launch.serve import greedy_decode
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0,
+                                 cfg.vocab_size)
+    gen, stats = greedy_decode(model, params, prompts, max_new=6)
+    assert gen.shape == (2, 6)
+    assert stats.tokens_out == 6
+
+
+def test_protocol_server_gates_and_serves(tiny_model):
+    cfg, model, params = tiny_model
+    from repro.core.ledger import Ledger
+    from repro.core.protocol import (CredentialError, ExtractionError,
+                                     ProtocolModelServer)
+    nodes = [f"n{i}" for i in range(6)]
+    led = Ledger()
+    led.record_contribution("n0", 1.0)
+    srv = ProtocolModelServer.create(model, params, nodes, led,
+                                     num_shards=12, redundancy=2,
+                                     max_fraction=0.4)
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32)}
+    # no credentials -> rejected
+    with pytest.raises(CredentialError):
+        srv.serve("outsider", batch)
+    # full swarm -> logits
+    logits = srv.serve("n0", batch)
+    assert logits.shape == (1, cfg.vocab_size)
+    ref = model.prefill(params, batch)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    # partial swarm -> cannot serve
+    with pytest.raises(ExtractionError):
+        srv.serve("n0", batch, online_nodes=nodes[:2])
+    # coalition extraction yields garbage params
+    broken = srv.attempt_extraction(nodes[:2])
+    broken_logits = model.prefill(broken, batch)
+    assert float(jnp.max(jnp.abs(broken_logits - ref))) > 1e-2
+
+
+# ------------------------------ checkpoint -------------------------------------
+def test_checkpoint_roundtrip(tiny_model, tmp_path):
+    cfg, model, params = tiny_model
+    from repro.checkpoint import checkpoint as ckpt
+    path = str(tmp_path / "ck")
+    ckpt.save(path, params, step=7)
+    restored = ckpt.restore(path, jax.eval_shape(lambda: params))
+    assert ckpt.load_step(path) == 7
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), params, restored)
+
+
+def test_custody_checkpoint_enforces_coverage(tiny_model, tmp_path):
+    cfg, model, params = tiny_model
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.core.unextractable import ShardCustody
+    nodes = [f"n{i}" for i in range(5)]
+    custody = ShardCustody.assign(nodes, 10, redundancy=2, max_fraction=0.5)
+    path = str(tmp_path / "custody_ck")
+    ckpt.save_custody(path, params, custody)
+    with pytest.raises(PermissionError):
+        ckpt.restore_custody(path, params, holders=["n0"])
+    restored = ckpt.restore_custody(path, params, holders=nodes)
+    flat_a = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                              for x in jax.tree.leaves(params)])
+    flat_b = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                              for x in jax.tree.leaves(restored)])
+    np.testing.assert_allclose(np.asarray(flat_a), np.asarray(flat_b),
+                               rtol=1e-6)
+
+
+# ------------------------------ data pipeline ----------------------------------
+def test_data_deterministic():
+    dcfg = DataConfig(vocab_size=100, seq_len=32, global_batch=8)
+    a = sample_tokens(dcfg, step=3)
+    b = sample_tokens(dcfg, step=3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = sample_tokens(dcfg, step=4)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([1, 2, 4, 8]), st.integers(0, 20))
+def test_property_data_sharding_partitions(num_shards, step):
+    """Shards are disjoint slices whose union is the global batch."""
+    dcfg = DataConfig(vocab_size=50, seq_len=16, global_batch=8)
+    full = lm_batch(dcfg, step)["tokens"]
+    parts = [lm_batch(dcfg, step, shard=s, num_shards=num_shards)["tokens"]
+             for s in range(num_shards)]
+    assert sum(p.shape[0] for p in parts) == full.shape[0]
+    # shard determinism
+    again = lm_batch(dcfg, step, shard=0, num_shards=num_shards)["tokens"]
+    np.testing.assert_array_equal(np.asarray(parts[0]), np.asarray(again))
+
+
+def test_labels_are_next_tokens():
+    dcfg = DataConfig(vocab_size=100, seq_len=32, global_batch=4)
+    b = lm_batch(dcfg, 0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+# ------------------------------ hlo cost model ----------------------------------
+def test_hlo_cost_counts_matmul_flops():
+    m, k, n = 64, 128, 32
+
+    def f(a, b):
+        return a @ b
+
+    lowered = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32))
+    hlo = lowered.compile().as_text()
+    from repro.launch.hlo_cost import analyze_hlo
+    cost = analyze_hlo(hlo, total_devices=1)
+    assert cost.flops == pytest.approx(2 * m * k * n, rel=0.01)
+
+
+def test_hlo_cost_multiplies_loop_trip_count():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    lowered = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((32, 64), jnp.float32),
+        jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    from repro.launch.hlo_cost import analyze_hlo
+    cost = analyze_hlo(hlo, total_devices=1)
+    expected = 10 * 2 * 32 * 64 * 64
+    assert cost.flops == pytest.approx(expected, rel=0.05)
+    # the raw XLA analysis would report ~1/10th of this
+    xla = compiled.cost_analysis()
+    if xla and xla.get("flops"):
+        assert cost.flops > 5 * float(xla["flops"])
+
+
+def test_roofline_terms():
+    from repro.launch.roofline import Roofline
+    r = Roofline(flops_per_device=197e12, bytes_per_device=819e9,
+                 wire_bytes_per_device=0.0, model_flops_global=197e12,
+                 num_chips=1)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.dominant in ("compute", "memory")
+    assert r.useful_flops_ratio == pytest.approx(1.0)
+
+
+def test_wire_byte_model():
+    from repro.launch.hlo_cost import _wire_bytes
+    # all-reduce moves 2(n-1)/n of the buffer per device
+    assert _wire_bytes("all-reduce", 1000, 4) == pytest.approx(1500.0)
+    assert _wire_bytes("all-gather", 1000, 4) == pytest.approx(750.0)
+    assert _wire_bytes("collective-permute", 1000, 4) == 1000.0
+    assert _wire_bytes("all-reduce", 1000, 1) == 0.0
+
+
+# ------------------------------ dry-run (subprocess) ----------------------------
+@pytest.mark.slow
+def test_dryrun_subprocess_single_pod(tmp_path):
+    """The real 256-chip dry-run for one cheap combination."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "tinyllama-1.1b", "--shape", "decode_32k",
+         "--out-dir", str(tmp_path)],
+        capture_output=True, text=True, timeout=420,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.load(open(
+        tmp_path / "tinyllama-1.1b__decode_32k__single__dense.json"))
+    assert rec["status"] == "ok"
+    assert rec["num_chips"] == 256
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_multi_pod_qsgd(tmp_path):
+    """512-chip multi-pod with int8-on-the-wire pod sync lowers + compiles."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "tinyllama-1.1b", "--shape", "train_4k",
+         "--multi-pod", "--pod-sync", "qsgd", "--out-dir", str(tmp_path)],
+        capture_output=True, text=True, timeout=420,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.load(open(
+        tmp_path / "tinyllama-1.1b__train_4k__multi__qsgd.json"))
+    assert rec["status"] == "ok" and rec["num_chips"] == 512
+
+
+# ------------------------------ pipeline parallel (subprocess) ------------------
+PIPELINE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.pipeline.pipeline import make_pipeline_apply, bubble_fraction
+mesh = jax.make_mesh((4,), ("pipe",))
+L, d, mb, m = 8, 16, 4, 6
+key = jax.random.PRNGKey(0)
+params = {"w": jax.random.normal(key, (L, d, d)) * 0.1}
+def layer_fn(lp, x):
+    return jnp.tanh(x @ lp["w"])
+apply = make_pipeline_apply(layer_fn, mesh)
+xs = jax.random.normal(jax.random.PRNGKey(1), (m, mb, d))
+ys = apply(params, xs)
+# sequential reference
+ref = xs
+for i in range(L):
+    ref = jnp.tanh(ref @ params["w"][i])
+np.testing.assert_allclose(np.asarray(ys), np.asarray(ref), rtol=2e-4, atol=2e-4)
+assert abs(bubble_fraction(6, 4) - 3/9) < 1e-9
+print("PIPELINE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_pipeline_parallel_subprocess():
+    """SWARM-style pipeline == sequential layer apply, on a real 4-stage mesh."""
+    out = subprocess.run(
+        [sys.executable, "-c", PIPELINE_SCRIPT],
+        capture_output=True, text=True, timeout=300,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "PIPELINE_OK" in out.stdout

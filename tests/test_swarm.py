@@ -1,0 +1,149 @@
+"""End-to-end swarm behaviour: the paper's five §3 properties + §4 + §5.5."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.derailment import no_off_report, simulate_derailment
+from repro.core.swarm import NodeSpec, Swarm, SwarmConfig
+from repro.core.verification import VerificationConfig
+from repro.optim.optimizer import SGD
+
+from conftest import tiny_quadratic_problem
+
+
+def _make_swarm(nodes, cfg, n_params=8):
+    loss_fn, params0, data_fn, target = tiny_quadratic_problem(n_params)
+    opt = SGD(lr=0.1, momentum=0.0)
+    swarm = Swarm(loss_fn, params0, opt, nodes, cfg, data_fn)
+    eval_fn = lambda p: loss_fn(p, data_fn(0, 10_000))
+    return swarm, eval_fn, target
+
+
+def test_honest_swarm_converges():
+    nodes = [NodeSpec(f"h{i}") for i in range(6)]
+    swarm, eval_fn, _ = _make_swarm(nodes, SwarmConfig(aggregator="mean"))
+    losses = swarm.run(40, eval_fn=eval_fn)
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_byzantine_breaks_mean_but_not_centered_clip():
+    """§3.3: one sign-flipping node derails mean aggregation; CC holds."""
+    nodes = [NodeSpec(f"h{i}") for i in range(8)] + \
+        [NodeSpec("adv", byzantine="sign_flip", byzantine_scale=20.0)]
+
+    swarm_mean, eval_fn, _ = _make_swarm(nodes, SwarmConfig(aggregator="mean"))
+    loss_mean = swarm_mean.run(30, eval_fn=eval_fn)[-1]
+
+    swarm_cc, eval_fn, _ = _make_swarm(
+        nodes, SwarmConfig(aggregator="centered_clip",
+                           agg_kwargs={"clip_tau": 1.0, "iters": 3}))
+    loss_cc = swarm_cc.run(30, eval_fn=eval_fn)[-1]
+    assert loss_cc < 0.1 * max(loss_mean, 1e-9) or loss_mean > 10 * loss_cc
+
+
+def test_elastic_membership():
+    """§3 property 3: nodes join and leave without disrupting training."""
+    nodes = [NodeSpec("h0"), NodeSpec("h1"),
+             NodeSpec("late", join_round=10),
+             NodeSpec("early", leave_round=10)]
+    swarm, eval_fn, _ = _make_swarm(nodes, SwarmConfig(aggregator="mean"))
+    losses = swarm.run(30, eval_fn=eval_fn)
+    assert losses[-1] < 0.1 * losses[0]
+    assert swarm.history[0]["n_active"] == 3
+    assert swarm.history[20]["n_active"] == 3
+    # shares minted only while active
+    assert swarm.ledger.balances["late"] < swarm.ledger.balances["h0"]
+
+
+def test_heterogeneous_speed_mints_proportional_shares():
+    """§3 property 5 + §4: a 3× faster node earns 3× the shares."""
+    nodes = [NodeSpec("fast", speed=3.0), NodeSpec("slow", speed=1.0)]
+    swarm, eval_fn, _ = _make_swarm(nodes, SwarmConfig(aggregator="mean"))
+    swarm.run(10)
+    assert swarm.ledger.balances["fast"] == pytest.approx(
+        3.0 * swarm.ledger.balances["slow"])
+
+
+def test_verification_slashes_cheater():
+    """§4.2: a zero-gradient freeloader is audited, slashed, and excluded."""
+    vcfg = VerificationConfig(p_check=1.0, stake=5.0, tolerance=1e-3)
+    nodes = [NodeSpec(f"h{i}") for i in range(4)] + \
+        [NodeSpec("cheat", byzantine="zero")]
+    swarm, eval_fn, _ = _make_swarm(
+        nodes, SwarmConfig(aggregator="mean", verification=vcfg))
+    swarm.run(5)
+    assert "cheat" in swarm.slashed
+    assert swarm.ledger.burned_stake >= 5.0
+    assert not swarm.ledger.can_infer("cheat")
+    # honest nodes never slashed despite 100% audit rate
+    assert all(f"h{i}" not in swarm.slashed for i in range(4))
+
+
+def test_verification_with_compression_spares_honest_nodes():
+    """Regression: the validator must re-encode its recompute with the
+    submitter's wire key — otherwise honest QSGD noise reads as cheating
+    (observed: honest nodes slashed at round 0)."""
+    vcfg = VerificationConfig(p_check=1.0, stake=5.0, tolerance=1e-3)
+    nodes = [NodeSpec(f"h{i}") for i in range(4)] + \
+        [NodeSpec("cheat", byzantine="zero")]
+    swarm, eval_fn, _ = _make_swarm(
+        nodes, SwarmConfig(aggregator="mean", verification=vcfg,
+                           compression="qsgd",
+                           compression_kwargs={"levels": 64}))
+    swarm.run(5)
+    assert swarm.slashed == {"cheat"}
+
+
+def test_wire_compression_still_converges():
+    """§3.1: QSGD-compressed gradients reach a good solution."""
+    nodes = [NodeSpec(f"h{i}") for i in range(6)]
+    swarm, eval_fn, _ = _make_swarm(
+        nodes, SwarmConfig(aggregator="mean", compression="qsgd",
+                           compression_kwargs={"levels": 64}))
+    losses = swarm.run(40, eval_fn=eval_fn)
+    assert losses[-1] < 0.2 * losses[0]
+
+
+# ------------------------------- §5.5 no-off -----------------------------------
+def _derail(aggregator, n_attack, verification=None, rounds=25):
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem()
+    opt = SGD(lr=0.1, momentum=0.0)
+    eval_fn = lambda p: loss_fn(p, data_fn(0, 10_000))
+    return simulate_derailment(
+        loss_fn, params0, opt, data_fn, eval_fn,
+        n_honest=8, n_attack=n_attack, rounds=rounds,
+        aggregator=aggregator, verification=verification)
+
+
+def test_derailment_mean_small_attacker_wins():
+    """Under mean aggregation a 2/10 attacker fraction derails (the
+    emergency off-switch works — and so does any vandal)."""
+    res = _derail("mean", n_attack=2)
+    assert res.derailed
+
+
+def test_derailment_robust_agg_resists_minority():
+    res = _derail("centered_clip", n_attack=2)
+    assert not res.derailed
+
+
+def test_derailment_robust_agg_fails_past_breakdown():
+    """≥ breakdown-point fraction derails even robust aggregation."""
+    res = _derail("centered_clip", n_attack=9)       # 9/17 > 1/2
+    assert res.derailed
+
+
+def test_derailment_verification_slashes_attackers():
+    """Near-perfect verification: attackers are slashed, training survives —
+    the paper's conclusion that only physical intervention remains."""
+    v = VerificationConfig(p_check=1.0, stake=5.0, tolerance=1e-3)
+    res = _derail("mean", n_attack=2, verification=v)
+    assert res.attackers_slashed == 2
+    assert not res.derailed
+
+
+def test_no_off_report_renders():
+    rows = [_derail("mean", 2), _derail("centered_clip", 2)]
+    rep = no_off_report(rows)
+    assert "mean" in rep and "centered_clip" in rep

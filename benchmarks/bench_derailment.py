@@ -5,6 +5,7 @@ from __future__ import annotations
 
 from benchmarks.common import Row
 from repro.core.derailment import attack_cost, simulate_derailment
+from repro.core.scenarios import get_scenario
 from repro.core.verification import VerificationConfig
 from repro.optim.optimizer import SGD
 
@@ -38,6 +39,14 @@ def run() -> list:
     rows.append(("nooff.verified.frac0.38", 0.0,
                  f"derailed={res.derailed} slashed={res.attackers_slashed}/6 "
                  "(derailment neutralized => only physical off remains)"))
+
+    # the registry's worst-case regime: 40% collusion vs CC + audits (§5.5)
+    scn = get_scenario("derailment_stress")
+    swarm = scn.build_swarm(loss_fn, params0, opt, data_fn, n_nodes=15)
+    losses = swarm.run(25, eval_fn=eval_fn, eval_every=24)
+    rows.append(("nooff.scenario.derailment_stress", 0.0,
+                 f"final_loss={losses[-1]:.3f} "
+                 f"slashed={len(swarm.slashed)}/{sum(1 for n in swarm.nodes if n.byzantine)}"))
 
     # attack economics
     for n_attack, ver in [(6, None), (6, v)]:

@@ -6,8 +6,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import dataclasses
+
 from benchmarks.common import Row, timeit
-from repro.core.swarm import NodeSpec, Swarm, SwarmConfig
+from repro.core.scenarios import get_scenario
+from repro.core.swarm import make_swarm
 from repro.core.verification import (
     VerificationConfig,
     cheating_irrational,
@@ -33,20 +36,23 @@ def run() -> list:
     rows.append(("verify.min_p_check_gain1_stake10", 0.0,
                  f"{min_p_check(1.0, 10.0):.2f}"))
 
-    # measured catch rate over a real run
+    # measured catch rate over a real run (audit_heavy scenario: 25%
+    # zero-gradient freeloaders, batched engine, swept over p_check)
     loss_fn, params0, data_fn = _problem()
+    scn = get_scenario("audit_heavy")
     for p_check in [0.2, 0.5]:
-        vcfg = VerificationConfig(p_check=p_check, stake=5.0, tolerance=1e-3)
-        nodes = [NodeSpec(f"h{i}") for i in range(6)] + \
-            [NodeSpec(f"cheat{i}", byzantine="zero") for i in range(2)]
-        swarm = Swarm(loss_fn, params0, SGD(lr=0.1, momentum=0.0), nodes,
-                      SwarmConfig(aggregator="mean", verification=vcfg),
-                      data_fn)
+        nodes, cfg = scn.build(n_nodes=8)
+        cfg = dataclasses.replace(
+            cfg, verification=dataclasses.replace(cfg.verification,
+                                                  p_check=p_check))
+        swarm = make_swarm(loss_fn, params0, SGD(lr=0.1, momentum=0.0),
+                           nodes, cfg, data_fn)
         rounds = 20
         swarm.run(rounds)
-        caught = len([s for s in swarm.slashed if s.startswith("cheat")])
+        n_cheat = sum(1 for n in nodes if n.byzantine)
+        caught = len([s for s in swarm.slashed if s.startswith("adv")])
         rows.append((f"verify.catch_rate.p{p_check}", 0.0,
-                     f"{caught}/2 cheaters slashed in <= {rounds} rounds; "
+                     f"{caught}/{n_cheat} cheaters slashed in <= {rounds} rounds; "
                      f"stake burned={swarm.ledger.burned_stake:g}"))
 
     # audit overhead: one recompute per audited update

@@ -43,13 +43,13 @@ def main():
 
     vcfg = VerificationConfig(p_check=0.5, stake=10.0, tolerance=1e-3)
     results = []
-    print("running derailment sweep (this trains a small LM repeatedly)...")
+    print("running derailment sweep on the batched swarm engine "
+          "(this trains a small LM repeatedly)...")
     # one shared honest baseline for every cell (it would otherwise be
-    # recomputed 9x)
-    from repro.core.swarm import NodeSpec, Swarm, SwarmConfig
-    base_swarm = Swarm(loss_fn, params, opt,
-                       [NodeSpec(f"h{i}") for i in range(n_honest)],
-                       SwarmConfig(aggregator="mean"), data_fn)
+    # recomputed 9x) — the registry's honest_baseline scenario
+    from repro.core.scenarios import get_scenario
+    base_swarm = get_scenario("honest_baseline").build_swarm(
+        loss_fn, params, opt, data_fn, n_nodes=n_honest)
     baseline_loss = base_swarm.run(args.rounds, eval_fn=eval_fn,
                                    eval_every=args.rounds)[-1]
     print(f"  honest baseline loss after {args.rounds} rounds: "

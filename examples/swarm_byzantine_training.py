@@ -1,5 +1,8 @@
 """END-TO-END DRIVER: train the paper's demonstrator LM across a simulated
-incentivized swarm exercising all five §3 properties + §4 incentives at once:
+incentivized swarm on the batched vmap/jit engine.
+
+The default "showcase" roster exercises all five §3 properties + §4
+incentives at once:
 
   - 10 heterogeneous nodes (speeds 0.5-3x), elastic (2 join late, 1 leaves),
   - 2 byzantine nodes (inner-product attack [87]),
@@ -7,7 +10,10 @@ incentivized swarm exercising all five §3 properties + §4 incentives at once:
   - stake/slash verification audits (§4.2),
   - fractional-ownership ledger + custody-sharded checkpoint (§4.1).
 
-    PYTHONPATH=src python examples/swarm_byzantine_training.py              # reduced, ~2 min
+Any scenario from the registry (docs/scenarios.md) runs the same driver:
+
+    PYTHONPATH=src python examples/swarm_byzantine_training.py             # showcase, ~2 min
+    PYTHONPATH=src python examples/swarm_byzantine_training.py --scenario audit_heavy --nodes 16
     PYTHONPATH=src python examples/swarm_byzantine_training.py --full      # true 125M
 """
 import argparse
@@ -17,7 +23,8 @@ import jax
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import get_config
-from repro.core.swarm import NodeSpec, Swarm, SwarmConfig
+from repro.core.scenarios import batched_data_fn_for, get_scenario, list_scenarios
+from repro.core.swarm import NodeSpec, SwarmConfig, make_swarm
 from repro.core.unextractable import ShardCustody
 from repro.core.verification import VerificationConfig
 from repro.data.pipeline import DataConfig, data_fn_for_swarm, model_batch
@@ -25,9 +32,41 @@ from repro.models.model import build_model
 from repro.optim.optimizer import AdamW
 
 
+def showcase_roster(rounds: int):
+    """The all-properties-at-once roster (not a registry scenario: it mixes
+    every regime deliberately; the registry keeps regimes isolated)."""
+    nodes = [
+        NodeSpec("h0", speed=3.0),
+        NodeSpec("h1", speed=1.0),
+        NodeSpec("h2", speed=1.0),
+        NodeSpec("h3", speed=0.5),
+        NodeSpec("h4", speed=1.0, leave_round=rounds // 2),
+        NodeSpec("h5", speed=1.0),
+        NodeSpec("late0", speed=2.0, join_round=rounds // 4),
+        NodeSpec("late1", speed=1.0, join_round=rounds // 4),
+        NodeSpec("adv0", byzantine="inner_product", byzantine_scale=20.0),
+        NodeSpec("adv1", byzantine="sign_flip", byzantine_scale=10.0),
+    ]
+    cfg = SwarmConfig(
+        aggregator="centered_clip",
+        agg_kwargs={"clip_tau": 2.0, "iters": 3},
+        verification=VerificationConfig(p_check=0.25, stake=10.0,
+                                        tolerance=1e-3, jackpot=5.0),
+        compression="qsgd",
+        compression_kwargs={"levels": 127, "bucket_size": 512},
+    )
+    return nodes, cfg
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--scenario", default="showcase",
+                    choices=["showcase"] + list_scenarios())
+    ap.add_argument("--nodes", type=int, default=10,
+                    help="swarm size (registry scenarios only)")
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "sequential"])
     ap.add_argument("--full", action="store_true",
                     help="true 125M params (slow on CPU)")
     ap.add_argument("--ckpt", default="/tmp/repro_swarm_custody_ckpt")
@@ -41,36 +80,25 @@ def main():
     print(f"model: {cfg.name} N={model.cfg.param_count():,} "
           f"({'full' if args.full else 'reduced'})")
 
-    n_nodes = 10
-    nodes = [
-        NodeSpec("h0", speed=3.0),
-        NodeSpec("h1", speed=1.0),
-        NodeSpec("h2", speed=1.0),
-        NodeSpec("h3", speed=0.5),
-        NodeSpec("h4", speed=1.0, leave_round=args.rounds // 2),
-        NodeSpec("h5", speed=1.0),
-        NodeSpec("late0", speed=2.0, join_round=args.rounds // 4),
-        NodeSpec("late1", speed=1.0, join_round=args.rounds // 4),
-        NodeSpec("adv0", byzantine="inner_product", byzantine_scale=20.0),
-        NodeSpec("adv1", byzantine="sign_flip", byzantine_scale=10.0),
-    ]
-    vcfg = VerificationConfig(p_check=0.25, stake=10.0, tolerance=1e-3,
-                              jackpot=5.0)
-    swarm_cfg = SwarmConfig(
-        aggregator="centered_clip",
-        agg_kwargs={"clip_tau": 2.0, "iters": 3},
-        verification=vcfg,
-        compression="qsgd",
-        compression_kwargs={"levels": 127, "bucket_size": 512},
-    )
+    if args.scenario == "showcase":
+        nodes, swarm_cfg = showcase_roster(args.rounds)
+    else:
+        nodes, swarm_cfg = get_scenario(args.scenario).build(n_nodes=args.nodes)
+    n_nodes = len(nodes)
+    print(f"scenario: {args.scenario} ({n_nodes} nodes, engine={args.engine})")
 
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
                       global_batch=n_nodes * 2)
     params = model.init(jax.random.PRNGKey(0))
     opt = AdamW(lr=5e-3)
     loss_fn = lambda p, b: model.loss(p, b)[0]
-    swarm = Swarm(loss_fn, params, opt, nodes, swarm_cfg,
-                  data_fn_for_swarm(cfg, dcfg, n_nodes))
+    data_fn = data_fn_for_swarm(cfg, dcfg, n_nodes)
+    # the synthetic pipeline is jax-pure in the node index, so the batched
+    # engine can build all N node batches in a single vmapped dispatch
+    bdf = (batched_data_fn_for(data_fn, n_nodes)
+           if args.engine == "batched" else None)
+    swarm = make_swarm(loss_fn, params, opt, nodes, swarm_cfg, data_fn,
+                       engine=args.engine, batched_data_fn=bdf)
     eval_fn = lambda p: loss_fn(p, model_batch(cfg, dcfg, 10**6))
 
     t0 = time.time()
@@ -82,7 +110,9 @@ def main():
             print(f"{r:6d} {rec['n_active']:6d} {rec['n_byzantine']:4d} "
                   f"{loss:8.4f}  {sorted(swarm.slashed)}")
 
-    print(f"\ntrained {args.rounds} rounds in {time.time() - t0:.0f}s")
+    dt = time.time() - t0
+    print(f"\ntrained {args.rounds} rounds in {dt:.0f}s "
+          f"({args.rounds / max(dt, 1e-9):.1f} rounds/s)")
 
     # §4: ownership proportional to verified (speed-weighted) work
     print("\nfractional ownership (ledger):")

@@ -1,0 +1,105 @@
+"""Version-compat shims for jax APIs that moved between 0.4.x and 0.6+.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+with two renames on the way: ``check_rep`` became ``check_vma``, and the
+partial-manual escape hatch flipped from ``auto`` (axes that stay automatic)
+to ``axis_names`` (axes that become manual).  ``lax.axis_size`` / ``lax.pvary``
+are new-API-only, and ``compiled.cost_analysis()`` changed its return type
+from list-of-dicts to dict.  The container pins jax 0.4.37 (old API); newer
+stacks have only the new one — callers use these wrappers and never spell
+either.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Iterable[str]] = None, check: bool = True):
+    """Dispatch to whichever shard_map this jax ships.
+
+    ``axis_names`` lists the mesh axes to run manually (None = all of them);
+    ``check`` maps to ``check_vma`` (new) / ``check_rep`` (old).
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check)
+        if axis_names is not None:
+            kwargs["axis_names"] = frozenset(axis_names)
+        return jax.shard_map(f, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check)
+    if axis_names is not None:
+        kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, **kwargs)
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a manual mesh axis, inside shard_map."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    # old jax: psum of a Python constant is special-cased to a static int
+    return jax.lax.psum(1, axis_name)
+
+
+def pvary(x, axis_names):
+    """Mark ``x`` as varying over ``axis_names`` (new-API replication typing).
+
+    Old jax has no varying-manual-axes annotation — with ``check_rep=False``
+    it is simply not needed, so this is the identity there.
+    """
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_names)
+    return x
+
+
+def collectives_emulated() -> bool:
+    """True when partial-manual shard_map cannot lower gather/permute
+    collectives (old jax: the 0.4.x SPMD partitioner hard-aborts on
+    ``all_gather``/``ppermute``/``axis_index`` inside an ``auto`` region —
+    only ``psum`` survives)."""
+    return not hasattr(jax, "shard_map")
+
+
+def all_gather(x, axis_name: str, *, index=None):
+    """``lax.all_gather`` (result stacked on a new leading axis).
+
+    ``index`` is this shard's position along the axis, derived from *data*
+    (an arange sharded over the axis), not ``axis_index`` — old jax cannot
+    lower ``axis_index`` in partial-manual mode either.  When emulation is
+    needed and ``index`` is given, the gather becomes scatter-into-zeros +
+    ``psum`` (each slot has exactly one contributor, so integer dtypes can't
+    overflow)."""
+    if index is None or not collectives_emulated():
+        return jax.lax.all_gather(x, axis_name)
+    n = axis_size(axis_name)
+    buf = jnp.zeros((n,) + x.shape, x.dtype).at[index].set(x)
+    return jax.lax.psum(buf, axis_name)
+
+
+def ppermute(x, axis_name: str, perm, *, index=None):
+    """``lax.ppermute`` with the same psum-based fallback as ``all_gather``.
+    Sources without an outgoing edge park their value in a spare slot;
+    destinations without an incoming edge read zeros (lax semantics)."""
+    if index is None or not collectives_emulated():
+        return jax.lax.ppermute(x, axis_name, perm)
+    n = axis_size(axis_name)
+    dst_of_src = {s: d for s, d in perm}
+    dst_table = jnp.asarray([dst_of_src.get(s, n) for s in range(n)], jnp.int32)
+    buf = jnp.zeros((n + 1,) + x.shape, x.dtype).at[dst_table[index]].set(x)
+    return jax.lax.psum(buf, axis_name)[index]
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on every jax version
+    (old jax returns a singleton list of dicts; empty/None when the backend
+    reports nothing)."""
+    xla = compiled.cost_analysis() or {}
+    if isinstance(xla, (list, tuple)):
+        xla = xla[0] if xla else {}
+    return dict(xla)

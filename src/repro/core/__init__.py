@@ -3,7 +3,11 @@
 - aggregation    : byzantine-robust aggregators (§3.3)
 - compression    : QSGD / top-k / PowerSGD wire compression (§3.1)
 - gossip         : gossip averaging + topologies (§3.2)
-- swarm          : elastic, heterogeneous, byzantine swarm trainer (§3)
+- swarm          : elastic, heterogeneous, byzantine swarm trainer (§3);
+                   batched jit engine + sequential reference oracle
+- scenarios      : named scenario registry (byzantine mixes, churn, wire
+                   compression, audit economics) consumed by benchmarks,
+                   examples, and tests
 - ledger         : fractional-ownership credentials (§4)
 - verification   : stake/slash game-theoretic compute verification (§4.2)
 - unextractable  : Protocol Model custody + extraction economics (§4.1)
@@ -19,6 +23,7 @@ from repro.core import (  # noqa: F401
     hierarchical,
     ledger,
     protocol,
+    scenarios,
     swarm,
     unextractable,
     verification,

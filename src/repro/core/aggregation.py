@@ -14,6 +14,11 @@ Implemented (each cited in the paper):
 
 Breakdown points (validated in tests / benchmarks):
   mean: 0; krum: (N-2)/2N needs N ≥ 2f+3; median/trimmed: 1/2; CC: ~1/2 (bounded error).
+
+Every aggregator also has a ``masked_*`` twin taking a fixed (N, D) stack
+plus a boolean keep-mask — the form the batched swarm engine needs so the
+jitted round keeps a fixed shape across membership churn.  A masked variant
+is defined to equal its dense counterpart on ``updates[mask]``.
 """
 from __future__ import annotations
 
@@ -96,7 +101,9 @@ def krum(updates: Array, *, f: int = 1) -> Array:
 @_as_matrix
 def multi_krum(updates: Array, *, f: int = 1, m: int = 0) -> Array:
     n = updates.shape[0]
-    m = m or max(n - f - 2, 1)
+    # clamp like masked_multi_krum: a static m can exceed the stack height
+    # when membership shrinks (top_k would fail loudly mid-training)
+    m = min(m or max(n - f - 2, 1), n)
     scores = _krum_scores(updates, f)
     _, idx = jax.lax.top_k(-scores, m)                   # m best (lowest) scores
     return jnp.mean(updates[idx], axis=0)
@@ -127,6 +134,112 @@ def centered_clip(updates: Array, *, clip_tau: float | None = None,
 
     v, _ = jax.lax.scan(body, v, None, length=iters)
     return v
+
+
+# -- masked (fixed-shape) variants ---------------------------------------------
+# The batched swarm engine keeps a fixed (N, D) update stack across rounds and
+# expresses membership/slashing as a boolean keep-mask, so the jitted round
+# never changes shape on churn.  Each ``masked_*`` aggregator therefore must
+# equal its dense counterpart applied to the compacted subset
+# ``updates[mask]`` (property-tested in tests/test_scenarios.py).  The shared
+# tricks: NaN-padding + ``nanmedian`` for medians, +inf-padding + rank masks
+# for order statistics with a *traced* kept-count k.
+
+
+def _masked_median(updates: Array, mask: Array) -> Array:
+    return jnp.nanmedian(jnp.where(mask[:, None], updates, jnp.nan), axis=0)
+
+
+def masked_mean(updates: Array, mask: Array) -> Array:
+    k = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+    return jnp.sum(updates * mask[:, None].astype(updates.dtype), axis=0) / k
+
+
+def masked_coordinate_median(updates: Array, mask: Array) -> Array:
+    return _masked_median(updates, mask)
+
+
+def masked_trimmed_mean(updates: Array, mask: Array, *, trim: int = 1) -> Array:
+    n = updates.shape[0]
+    k = jnp.sum(mask.astype(jnp.int32))
+    t = jnp.minimum(trim, (k - 1) // 2)
+    s = jnp.sort(jnp.where(mask[:, None], updates, jnp.inf), axis=0)
+    ranks = jnp.arange(n)[:, None]
+    keep = (ranks >= t) & (ranks < k - t)
+    total = jnp.sum(jnp.where(keep, s, 0.0), axis=0)
+    return total / jnp.maximum(k - 2 * t, 1).astype(updates.dtype)
+
+
+def _masked_krum_scores(updates: Array, mask: Array, f: int) -> Array:
+    """Krum scores over the kept subset; masked-out rows score +inf."""
+    n = updates.shape[0]
+    k_act = jnp.sum(mask.astype(jnp.int32))
+    d2 = jnp.sum(jnp.square(updates[:, None, :] - updates[None, :, :]), axis=-1)
+    pair_ok = mask[:, None] & mask[None, :] & ~jnp.eye(n, dtype=bool)
+    d2 = jnp.where(pair_ok, d2, jnp.inf)
+    k_near = jnp.maximum(k_act - f - 2, 1)
+    s = jnp.sort(d2, axis=-1)                            # ascending per row
+    nearest = jnp.where(jnp.arange(n)[None, :] < k_near, s, 0.0)
+    scores = jnp.sum(nearest, axis=-1)
+    # A kept row with no finite neighbour (k_act == 1) scores +inf like the
+    # masked rows; cap kept scores below +inf so argmin/argsort can never
+    # prefer a masked-out (slashed/inactive) row over a kept one.
+    big = jnp.asarray(jnp.finfo(jnp.float32).max, scores.dtype)
+    return jnp.where(mask, jnp.minimum(scores, big), jnp.inf)
+
+
+def masked_krum(updates: Array, mask: Array, *, f: int = 1) -> Array:
+    scores = _masked_krum_scores(updates, mask, f)
+    return updates[jnp.argmin(scores)]
+
+
+def masked_multi_krum(updates: Array, mask: Array, *, f: int = 1, m: int = 0) -> Array:
+    n = updates.shape[0]
+    k_act = jnp.sum(mask.astype(jnp.int32))
+    # clamp a static m to the kept count: score-sorted masked rows sit at the
+    # end but hold real (corrupted/stale) updates, so selecting past k_act
+    # would silently average them in (the dense twin fails loudly instead)
+    m_eff = (jnp.clip(jnp.asarray(m), 1, k_act) if m
+             else jnp.maximum(k_act - f - 2, 1))
+    scores = _masked_krum_scores(updates, mask, f)
+    order = jnp.argsort(scores)                          # best first, masked last
+    sel = (jnp.arange(n) < m_eff)[:, None]
+    return jnp.sum(jnp.where(sel, updates[order], 0.0), axis=0) / m_eff.astype(updates.dtype)
+
+
+def masked_centered_clip(updates: Array, mask: Array, *, clip_tau: float | None = None,
+                         iters: int = 3, v0: Array | None = None) -> Array:
+    k = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+    v = (_masked_median(updates, mask) if v0 is None else v0.astype(jnp.float32))
+
+    def body(v, _):
+        diff = updates - v[None]
+        norm = jnp.linalg.norm(diff, axis=-1, keepdims=True)
+        tau = (jnp.nanmedian(jnp.where(mask[:, None], norm, jnp.nan))
+               if clip_tau is None else clip_tau)
+        scale = jnp.minimum(1.0, tau / jnp.maximum(norm, 1e-12))
+        step = jnp.sum(diff * scale * mask[:, None].astype(jnp.float32), axis=0) / k
+        return v + step, None
+
+    v, _ = jax.lax.scan(body, v, None, length=iters)
+    return v
+
+
+MASKED_AGGREGATORS: Dict[str, Callable] = {
+    "mean": masked_mean,
+    "median": masked_coordinate_median,
+    "trimmed_mean": masked_trimmed_mean,
+    "krum": masked_krum,
+    "multi_krum": masked_multi_krum,
+    "centered_clip": masked_centered_clip,
+}
+
+
+def get_masked_aggregator(name: str, **defaults) -> Callable:
+    """Masked twin of :func:`get_aggregator`: ``fn(updates, mask)`` where
+    ``updates`` is (N, D) and ``mask`` marks the rows that participate."""
+    fn = MASKED_AGGREGATORS[name]
+    return functools.partial(fn, **defaults) if defaults else fn
 
 
 AGGREGATORS: Dict[str, Callable] = {

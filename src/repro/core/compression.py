@@ -13,8 +13,9 @@ path used by tests to bound reconstruction error.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,7 +59,9 @@ def qsgd_compress(key, x: Array, *, levels: int = 16,
     rnd = jax.random.uniform(key, padded.shape)
     q = (lower + (rnd < p)).astype(jnp.int32)            # in [0, levels]
     sign = jnp.signbit(padded)
-    bits_per_el = int(jnp.ceil(jnp.log2(levels + 1))) + 1
+    # levels is static, so the wire width is plain Python math — keeps the
+    # codec traceable under jit/vmap (the batched swarm engine vmaps it).
+    bits_per_el = math.ceil(math.log2(levels + 1)) + 1
     return Compressed(
         kind="qsgd",
         payload={"q": q, "sign": sign, "norms": norms, "levels": levels,
@@ -127,6 +130,23 @@ def powersgd_compress(key, x: Array, *, rank: int = 4, iters: int = 1) -> Compre
 
 def powersgd_decompress(c: Compressed) -> Array:
     return (c.payload["p"] @ c.payload["q"].T).reshape(c.orig_shape)
+
+
+def roundtrip(kind: Optional[str], key, x: Array, **kwargs) -> Array:
+    """Lossy wire round-trip: what the receiver reconstructs from ``x``.
+
+    ``kind=None`` is the uncompressed wire (identity).  Pure function of
+    ``(kind, key, x)`` — jit- and vmap-safe, so the batched swarm engine
+    round-trips all N node gradients in one ``jax.vmap`` call over per-node
+    keys.  QSGD is the only stochastic codec; the key is ignored by the rest.
+    """
+    if kind is None:
+        return x
+    if kind == "qsgd":
+        return qsgd_decompress(qsgd_compress(key, x, **kwargs))
+    if kind == "topk":
+        return topk_decompress(topk_compress(x, **kwargs))
+    raise ValueError(f"unknown wire codec: {kind!r}")
 
 
 DECOMPRESSORS = {

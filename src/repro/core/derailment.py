@@ -23,7 +23,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.swarm import NodeSpec, Swarm, SwarmConfig
+from repro.core.swarm import NodeSpec, SwarmConfig, make_swarm
 from repro.core.verification import VerificationConfig
 
 
@@ -66,18 +66,20 @@ def simulate_derailment(loss_fn, init_params, optimizer, data_fn, eval_fn, *,
                         verification: Optional[VerificationConfig] = None,
                         attack: str = "inner_product", scale: float = 50.0,
                         baseline_loss: Optional[float] = None,
-                        seed: int = 0) -> DerailmentResult:
+                        seed: int = 0, engine: str = "batched") -> DerailmentResult:
     init_loss = float(eval_fn(init_params))
     nodes = make_swarm_nodes(n_honest, n_attack, attack, scale)
     cfg = SwarmConfig(aggregator=aggregator, verification=verification, seed=seed,
                       agg_kwargs={"f": max(1, n_attack)} if "krum" in aggregator else {})
-    swarm = Swarm(loss_fn, init_params, optimizer, nodes, cfg, data_fn)
+    swarm = make_swarm(loss_fn, init_params, optimizer, nodes, cfg, data_fn,
+                       engine=engine)
     losses = swarm.run(rounds, eval_fn=eval_fn, eval_every=max(1, rounds // 5))
 
     if baseline_loss is None:
-        base = Swarm(loss_fn, init_params, optimizer,
-                     [NodeSpec(f"h{i}") for i in range(n_honest)],
-                     SwarmConfig(aggregator="mean", seed=seed), data_fn)
+        base = make_swarm(loss_fn, init_params, optimizer,
+                          [NodeSpec(f"h{i}") for i in range(n_honest)],
+                          SwarmConfig(aggregator="mean", seed=seed), data_fn,
+                          engine=engine)
         baseline_loss = base.run(rounds, eval_fn=eval_fn, eval_every=rounds)[-1]
 
     return DerailmentResult(

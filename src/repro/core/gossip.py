@@ -10,6 +10,8 @@ synchronization*.  Convergence to the exact mean is geometric with rate λ₂
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -71,7 +73,9 @@ def gossip_round(x: Array, w: Array) -> Array:
     return (w.astype(flat.dtype) @ flat).reshape(x.shape)
 
 
+@partial(jax.jit, static_argnames=("rounds",))
 def gossip_average(x: Array, w: Array, rounds: int) -> Array:
+    """``rounds`` mixing steps, jit-compiled (cached per round count)."""
     def body(x, _):
         return gossip_round(x, w), None
     out, _ = jax.lax.scan(body, x, None, length=rounds)

@@ -16,12 +16,28 @@ Simulates N protocol participants training one model:
 Plus the §4 mechanisms: stake/slash verification audits and the ownership
 ledger.  Runs on CPU with a real (small) model; the aggregation math is
 identical at any scale.
+
+Two engines share one API (``step``/``run``/``history``/``ledger``):
+
+- :class:`Swarm` — the default **batched engine**.  One jitted round computes
+  all N node gradients with ``jax.vmap(jax.grad(loss_fn))``, corruption as a
+  vectorized ``lax.switch`` over per-node behaviour codes, the wire codec as a
+  ``vmap`` over per-node keys, audits via ``verification.audit_batch``, and
+  aggregation through the mask-aware aggregators in ``core.aggregation``.
+  Membership and slashing are a boolean active-mask, so the jitted round has a
+  **fixed shape across rounds** — churn never triggers recompilation.
+- :class:`SequentialSwarm` — the original per-node Python loop, kept as the
+  readable reference oracle the batched engine is equivalence-tested against.
+
+Both engines draw every random number from the same per-(purpose, round,
+node) ``fold_in`` schedule, so with the same seed they produce the *same*
+corruption noise, wire-codec realizations, audit selections, and therefore
+the same ``agg_norm`` history (within fp32 reduction-order tolerance).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Set
 
 import jax
 import jax.numpy as jnp
@@ -29,9 +45,27 @@ import numpy as np
 
 from repro.core import aggregation, compression
 from repro.core.ledger import Ledger
-from repro.core.verification import VerificationConfig, audit
+from repro.core.verification import VerificationConfig, audit_batch, audit_flat
 
 Array = jax.Array
+
+#: Byzantine behaviours, indexed by the code used in the vectorized
+#: ``lax.switch`` corruption table.  Code 0 is honest (identity).
+BEHAVIOURS = ("honest", "sign_flip", "scale", "noise", "zero", "inner_product")
+BEHAVIOUR_CODES: Dict[str, int] = {name: i for i, name in enumerate(BEHAVIOURS)}
+
+# Key-schedule purposes.  Every random draw in a round is keyed by
+# (seed, purpose, round, node_index) via fold_in — engine-independent, which
+# is what makes the sequential reference and the batched engine bit-identical
+# in their randomness (and keeps the batched round free of host-side key
+# chains that would serialize it).
+_CORRUPT, _WIRE, _AUDIT_SEL, _AUDIT_NOISE = range(4)
+
+
+def _node_key(base: Array, purpose: int, rnd, node_idx) -> Array:
+    k = jax.random.fold_in(base, purpose)
+    k = jax.random.fold_in(k, rnd)
+    return jax.random.fold_in(k, node_idx)
 
 
 @dataclass(frozen=True)
@@ -46,6 +80,14 @@ class NodeSpec:
     def active(self, rnd: int) -> bool:
         return self.join_round <= rnd and (self.leave_round is None or rnd < self.leave_round)
 
+    @property
+    def behaviour_code(self) -> int:
+        kind = self.byzantine or "honest"
+        if kind not in BEHAVIOUR_CODES:
+            raise ValueError(f"unknown byzantine behaviour: {kind!r} "
+                             f"(known: {BEHAVIOURS})")
+        return BEHAVIOUR_CODES[kind]
+
 
 @dataclass(frozen=True)
 class SwarmConfig:
@@ -58,6 +100,8 @@ class SwarmConfig:
 
 
 def corrupt(kind: str, grad_flat: Array, honest_mean: Array, scale: float, key) -> Array:
+    """Scalar (single-node) corruption table — the reference the vectorized
+    ``lax.switch`` table below must match branch for branch."""
     if kind == "sign_flip":
         return -scale * grad_flat
     if kind == "scale":
@@ -72,8 +116,20 @@ def corrupt(kind: str, grad_flat: Array, honest_mean: Array, scale: float, key) 
     raise ValueError(kind)
 
 
-class Swarm:
-    """Protocol-learning training loop over simulated participants."""
+# Vectorized corruption: branch b is BEHAVIOURS[b]; applied per node under
+# vmap as lax.switch(code, branches, grad, honest_mean, scale, key).
+_CORRUPT_BRANCHES = (
+    lambda g, hm, s, k: g,                                        # honest
+    lambda g, hm, s, k: -s * g,                                   # sign_flip
+    lambda g, hm, s, k: s * g,                                    # scale
+    lambda g, hm, s, k: g + s * jax.random.normal(k, g.shape),    # noise
+    lambda g, hm, s, k: jnp.zeros_like(g),                        # zero
+    lambda g, hm, s, k: -s * hm,                                  # inner_product
+)
+
+
+class _SwarmBase:
+    """State, ledger plumbing, and the run() loop shared by both engines."""
 
     def __init__(self, loss_fn: Callable, params, optimizer, nodes: List[NodeSpec],
                  cfg: SwarmConfig, data_fn: Callable[[int, int], dict]):
@@ -86,15 +142,53 @@ class Swarm:
         self.cfg = cfg
         self.data_fn = data_fn
         self.ledger = Ledger()
-        self.slashed: set = set()
-        self.rng = np.random.default_rng(cfg.seed)
-        self._key = jax.random.PRNGKey(cfg.seed)
-        self._grad = jax.jit(jax.grad(loss_fn))
-        self._flat_shapes = None
+        self.slashed: Set[str] = set()
         self.history: List[dict] = []
+        self._base_key = jax.random.PRNGKey(cfg.seed)
         if cfg.verification:
             for n in self.nodes:
                 self.ledger.stake(n.node_id, cfg.verification.stake)
+
+    def step(self, rnd: int) -> dict:
+        raise NotImplementedError
+
+    def _unflatten(self, vec: Array):
+        """Flat fp32 vector -> params-shaped pytree (set up by each engine:
+        lazily from the first gradient in SequentialSwarm, from params at
+        __init__ in Swarm — both structures are identical)."""
+        out, off = [], 0
+        for shape, dtype in self._flat_shapes:
+            size = int(np.prod(shape)) if shape else 1
+            out.append(vec[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree.unflatten(self._treedef, out)
+
+    def run(self, rounds: int, eval_fn: Optional[Callable] = None, eval_every: int = 10):
+        losses = []
+        for r in range(rounds):
+            rec = self.step(r)
+            if eval_fn and (r % eval_every == 0 or r == rounds - 1):
+                rec["eval_loss"] = float(eval_fn(self.params))
+                losses.append(rec["eval_loss"])
+        return losses
+
+    def _slash(self, node: NodeSpec) -> None:
+        self.ledger.slash(node.node_id)
+        self.ledger.pay_jackpot("validator", self.cfg.verification.jackpot)
+        self.slashed.add(node.node_id)
+
+
+class SequentialSwarm(_SwarmBase):
+    """Per-node Python-loop engine: the readable reference oracle.
+
+    O(N) dispatches per round; use :class:`Swarm` for anything but tests and
+    equivalence checks.
+    """
+
+    def __init__(self, loss_fn, params, optimizer, nodes, cfg, data_fn):
+        super().__init__(loss_fn, params, optimizer, nodes, cfg, data_fn)
+        self._grad = jax.jit(jax.grad(loss_fn))
+        self._flat_shapes = None
 
     # -- helpers ----------------------------------------------------------------
     def _flatten(self, tree) -> Array:
@@ -104,55 +198,40 @@ class Swarm:
             self._treedef = jax.tree.structure(tree)
         return jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
 
-    def _unflatten(self, vec: Array):
-        out, off = [], 0
-        for shape, dtype in self._flat_shapes:
-            size = int(np.prod(shape)) if shape else 1
-            out.append(vec[off:off + size].reshape(shape).astype(dtype))
-            off += size
-        return jax.tree.unflatten(self._treedef, out)
-
-    def _next_key(self):
-        self._key, k = jax.random.split(self._key)
-        return k
-
     def _apply_wire(self, gf: Array, key) -> Array:
         """Round-trip a flat gradient through the configured wire codec."""
         cfg = self.cfg
-        if cfg.compression == "qsgd":
-            c = compression.qsgd_compress(key, gf, **cfg.compression_kwargs)
-            return compression.qsgd_decompress(c)
-        if cfg.compression == "topk":
-            c = compression.topk_compress(gf, **cfg.compression_kwargs)
-            return compression.topk_decompress(c)
-        return gf
+        return compression.roundtrip(cfg.compression, key, gf,
+                                     **cfg.compression_kwargs)
 
     # -- one round ----------------------------------------------------------------
     def step(self, rnd: int) -> dict:
         cfg = self.cfg
-        active = [n for n in self.nodes if n.active(rnd) and n.node_id not in self.slashed]
+        active = [(i, n) for i, n in enumerate(self.nodes)
+                  if n.active(rnd) and n.node_id not in self.slashed]
         if not active:
             raise RuntimeError(f"round {rnd}: no active nodes")
 
         honest_grads, submitted, metas = [], [], []
-        for i, node in enumerate(active):
-            batch = self.data_fn(self.nodes.index(node), rnd)
+        for i, node in active:
+            batch = self.data_fn(i, rnd)
             g = self._grad(self.params, batch)
             gf = self._flatten(g)
             honest_grads.append(gf)
-            metas.append((node, batch))
+            metas.append((i, node, batch))
         honest_mean = jnp.mean(jnp.stack(honest_grads), axis=0)
 
-        # corruption + wire compression.  The wire key is RECORDED: QSGD is
-        # deterministic given (key, tensor), so a validator recomputing the
-        # gradient re-encodes with the submitter's key and compares like
-        # with like (otherwise honest lossy compression reads as cheating).
+        # corruption + wire compression.  The wire key is part of the shared
+        # (purpose, round, node) schedule: QSGD is deterministic given
+        # (key, tensor), so a validator recomputing the gradient re-encodes
+        # with the submitter's key and compares like with like (otherwise
+        # honest lossy compression reads as cheating).
         wire_keys = []
-        for gf, (node, _) in zip(honest_grads, metas):
+        for gf, (i, node, _) in zip(honest_grads, metas):
             if node.byzantine:
                 gf = corrupt(node.byzantine, gf, honest_mean, node.byzantine_scale,
-                             self._next_key())
-            wk = self._next_key()
+                             _node_key(self._base_key, _CORRUPT, rnd, i))
+            wk = _node_key(self._base_key, _WIRE, rnd, i)
             wire_keys.append(wk)
             submitted.append(self._apply_wire(gf, wk))
 
@@ -161,22 +240,23 @@ class Swarm:
         keep = [True] * len(active)
         if cfg.verification:
             v = cfg.verification
-            for i, (node, batch) in enumerate(metas):
-                if self.rng.random() >= v.p_check:
+            for j, (i, node, batch) in enumerate(metas):
+                sel = jax.random.uniform(_node_key(self._base_key, _AUDIT_SEL, rnd, i))
+                if float(sel) >= v.p_check:
                     continue
-
-                def recompute(b=batch, wk=wire_keys[i]):
-                    g = self._flatten(self._grad(self.params, b))
-                    return self._unflatten(self._apply_wire(g, wk))
-
-                ok, mismatch = audit(self._unflatten(submitted[i]), recompute, v,
-                                     self._next_key())
+                # recompute the gradient, re-encode with the submitter's wire
+                # key, and compare flat — audit_flat is the same noise/compare
+                # formula the batched engine vmaps, so both engines reach the
+                # same pass/slash decision even at the tolerance boundary
+                recomputed = self._apply_wire(
+                    self._flatten(self._grad(self.params, batch)), wire_keys[j])
+                ok, mismatch = audit_flat(
+                    submitted[j], recomputed,
+                    _node_key(self._base_key, _AUDIT_NOISE, rnd, i), v)
                 if not ok:
-                    self.ledger.slash(node.node_id)
-                    self.ledger.pay_jackpot("validator", v.jackpot)
-                    self.slashed.add(node.node_id)
+                    self._slash(node)
                     caught.append(node.node_id)
-                    keep[i] = False
+                    keep[j] = False
 
         kept = [g for g, k in zip(submitted, keep) if k]
         if kept:
@@ -188,25 +268,174 @@ class Swarm:
             agg = jnp.zeros_like(honest_grads[0])  # every update audited out
 
         # mint shares ∝ verified work (speed-weighted) (§4)
-        for (node, _), k in zip(metas, keep):
+        for (_, node, _), k in zip(metas, keep):
             if k:
                 self.ledger.record_contribution(node.node_id, node.speed)
 
         rec = {
             "round": rnd,
             "n_active": len(active),
-            "n_byzantine": sum(1 for n in active if n.byzantine),
+            "n_byzantine": sum(1 for _, n in active if n.byzantine),
             "caught": caught,
             "agg_norm": float(jnp.linalg.norm(agg)),
         }
         self.history.append(rec)
         return rec
 
-    def run(self, rounds: int, eval_fn: Optional[Callable] = None, eval_every: int = 10):
-        losses = []
-        for r in range(rounds):
-            rec = self.step(r)
-            if eval_fn and (r % eval_every == 0 or r == rounds - 1):
-                rec["eval_loss"] = float(eval_fn(self.params))
-                losses.append(rec["eval_loss"])
-        return losses
+
+class Swarm(_SwarmBase):
+    """Batched, jit-compiled protocol-learning engine (the default).
+
+    One device program per round, fixed (N, D) shapes forever:
+
+    - gradients: ``jax.vmap(jax.grad(loss_fn))`` over stacked per-node batches;
+    - corruption: vectorized ``lax.switch`` over per-node behaviour codes;
+    - wire codec: ``vmap`` of ``compression.roundtrip`` over per-node keys;
+    - audits: ``verification.audit_batch`` on the full stack, gated by a
+      per-node audit-selection mask;
+    - aggregation: mask-aware aggregators (``aggregation.masked_*``) driven
+      by ``keep = active & ~caught``.
+
+    Inactive nodes still occupy a lane (their gradient is computed and then
+    masked) — that is the price of a churn-proof compiled round, and it is
+    why this engine is O(1) dispatches per round instead of O(N).
+
+    ``batched_data_fn(rnd) -> batch-with-leading-N-axis`` skips the per-node
+    host stacking loop when the data pipeline can produce a stacked batch
+    directly (see ``core.scenarios.batched_data_fn_for``).
+    """
+
+    def __init__(self, loss_fn, params, optimizer, nodes, cfg, data_fn, *,
+                 batched_data_fn: Optional[Callable[[int], dict]] = None):
+        super().__init__(loss_fn, params, optimizer, nodes, cfg, data_fn)
+        self.batched_data_fn = batched_data_fn
+        n = len(self.nodes)
+        self._codes = jnp.asarray([s.behaviour_code for s in self.nodes], jnp.int32)
+        self._scales = jnp.asarray([s.byzantine_scale for s in self.nodes], jnp.float32)
+        far = np.iinfo(np.int32).max
+        self._joins_np = np.asarray([s.join_round for s in self.nodes], np.int32)
+        self._leaves_np = np.asarray(
+            [far if s.leave_round is None else s.leave_round for s in self.nodes],
+            np.int32)
+        self._joins = jnp.asarray(self._joins_np)
+        self._leaves = jnp.asarray(self._leaves_np)
+        self._slashed_np = np.zeros(n, bool)
+        leaves = jax.tree.leaves(self.params)
+        self._treedef = jax.tree.structure(self.params)
+        self._flat_shapes = [(l.shape, l.dtype) for l in leaves]
+        self._round_fn = jax.jit(self._round)
+
+    # -- helpers ----------------------------------------------------------------
+    def _flatten_stack(self, tree) -> Array:
+        """pytree with leading node axis -> (N, D) fp32 matrix."""
+        n = len(self.nodes)
+        return jnp.concatenate([l.reshape(n, -1).astype(jnp.float32)
+                                for l in jax.tree.leaves(tree)], axis=1)
+
+    def _stack_batches(self, rnd: int):
+        if self.batched_data_fn is not None:
+            return self.batched_data_fn(rnd)
+        per_node = [self.data_fn(i, rnd) for i in range(len(self.nodes))]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_node)
+
+    # -- the jitted round --------------------------------------------------------
+    def _round(self, params, opt_state, batches, rnd, slashed_mask):
+        cfg = self.cfg
+        n = len(self.nodes)
+        active = (self._joins <= rnd) & (rnd < self._leaves) & (~slashed_mask)
+        nact = jnp.sum(active.astype(jnp.float32))
+
+        grads = jax.vmap(jax.grad(self.loss_fn), in_axes=(None, 0))(params, batches)
+        gf = self._flatten_stack(grads)                               # (N, D)
+        maskf = active.astype(jnp.float32)[:, None]
+        honest_mean = jnp.sum(gf * maskf, axis=0) / jnp.maximum(nact, 1.0)
+
+        idx = jnp.arange(n)
+        ck = jax.vmap(lambda i: _node_key(self._base_key, _CORRUPT, rnd, i))(idx)
+        wk = jax.vmap(lambda i: _node_key(self._base_key, _WIRE, rnd, i))(idx)
+        corrupted = jax.vmap(
+            lambda c, g, s, k: jax.lax.switch(c, _CORRUPT_BRANCHES,
+                                              g, honest_mean, s, k)
+        )(self._codes, gf, self._scales, ck)
+
+        def wire(key, g):
+            return compression.roundtrip(cfg.compression, key, g,
+                                         **cfg.compression_kwargs)
+
+        submitted = jax.vmap(wire)(wk, corrupted)
+
+        caught = jnp.zeros(n, bool)
+        if cfg.verification:                      # static: baked at trace time
+            v = cfg.verification
+            sel = jax.vmap(lambda i: jax.random.uniform(
+                _node_key(self._base_key, _AUDIT_SEL, rnd, i)))(idx)
+            audited = active & (sel < v.p_check)
+            # the validator recomputes the honest gradient and re-encodes it
+            # with the submitter's wire key (see SequentialSwarm.step)
+            recomputed = jax.vmap(wire)(wk, gf)
+            nk = jax.vmap(lambda i: _node_key(self._base_key, _AUDIT_NOISE,
+                                              rnd, i))(idx)
+            passes, _ = audit_batch(submitted, recomputed, nk, v)
+            caught = audited & (~passes)
+        keep = active & (~caught)
+
+        agg = aggregation.get_masked_aggregator(
+            cfg.aggregator, **cfg.agg_kwargs)(submitted, keep)
+        any_keep = jnp.any(keep)
+        agg = jnp.where(any_keep, agg, jnp.zeros_like(agg))
+        new_params, new_opt = jax.lax.cond(
+            any_keep,
+            lambda p, o: self.optimizer.update(self._unflatten(agg), o, p),
+            lambda p, o: (p, o),
+            params, opt_state)
+        return new_params, new_opt, caught, keep, jnp.linalg.norm(agg)
+
+    # -- one round ----------------------------------------------------------------
+    def step(self, rnd: int) -> dict:
+        active_np = ((self._joins_np <= rnd) & (rnd < self._leaves_np)
+                     & ~self._slashed_np)
+        if not active_np.any():
+            raise RuntimeError(f"round {rnd}: no active nodes")
+
+        batches = self._stack_batches(rnd)
+        self.params, self.opt_state, caught, keep, agg_norm = self._round_fn(
+            self.params, self.opt_state, batches, rnd,
+            jnp.asarray(self._slashed_np))
+
+        caught_ids = []
+        for i in np.flatnonzero(np.asarray(caught)):
+            node = self.nodes[int(i)]
+            self._slash(node)
+            self._slashed_np[int(i)] = True
+            caught_ids.append(node.node_id)
+        for i in np.flatnonzero(np.asarray(keep)):
+            node = self.nodes[int(i)]
+            self.ledger.record_contribution(node.node_id, node.speed)
+
+        rec = {
+            "round": rnd,
+            "n_active": int(active_np.sum()),
+            "n_byzantine": int(sum(1 for i in np.flatnonzero(active_np)
+                                   if self.nodes[int(i)].byzantine)),
+            "caught": caught_ids,
+            "agg_norm": float(agg_norm),
+        }
+        self.history.append(rec)
+        return rec
+
+
+ENGINES: Dict[str, type] = {"batched": Swarm, "sequential": SequentialSwarm}
+
+
+def make_swarm(loss_fn, params, optimizer, nodes: List[NodeSpec], cfg: SwarmConfig,
+               data_fn, *, engine: str = "batched",
+               batched_data_fn: Optional[Callable[[int], dict]] = None) -> _SwarmBase:
+    """Build a swarm with the requested engine ("batched" | "sequential")."""
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine: {engine!r} (known: {sorted(ENGINES)})")
+    if batched_data_fn is not None:
+        if engine != "batched":
+            raise ValueError("batched_data_fn requires engine='batched'")
+        return Swarm(loss_fn, params, optimizer, nodes, cfg, data_fn,
+                     batched_data_fn=batched_data_fn)
+    return ENGINES[engine](loss_fn, params, optimizer, nodes, cfg, data_fn)

@@ -57,6 +57,31 @@ def audit(claimed, recompute_fn: Callable[[], object], cfg: VerificationConfig,
     return bool(mm <= cfg.tolerance), mm
 
 
+def audit_flat(claimed: Array, recomputed: Array, key: Array,
+               cfg: VerificationConfig) -> tuple[Array, Array]:
+    """§4.2 audit over flat fp32 update vectors — the ONE noise-and-compare
+    formula both swarm engines use, so that with a shared key they reach the
+    same pass/slash decision even at the tolerance boundary.  Returns
+    ``(passes, mismatch)`` (0-d bool/float arrays; jit-safe)."""
+    d = claimed.shape[-1]
+    noisy = recomputed + (cfg.numeric_noise
+                          * jax.random.normal(key, recomputed.shape, jnp.float32)
+                          * jnp.linalg.norm(recomputed) / np.sqrt(max(1, d)))
+    mm = jnp.linalg.norm(claimed - noisy) / jnp.maximum(
+        jnp.linalg.norm(noisy), 1e-30)
+    return mm <= cfg.tolerance, mm
+
+
+def audit_batch(claimed: Array, recomputed: Array, keys: Array,
+                cfg: VerificationConfig) -> tuple[Array, Array]:
+    """Vectorized :func:`audit_flat` over fixed (N, D) stacks — per-node
+    claimed vs validator-recomputed updates, one noise key per node.
+    jit/vmap-safe — the batched engine evaluates every node each round and
+    selects the audited subset with a boolean mask."""
+    return jax.vmap(lambda c, r, k: audit_flat(c, r, k, cfg))(
+        claimed, recomputed, keys)
+
+
 # -- economics (paper §4.2 / §5.5) ---------------------------------------------
 def expected_cheat_value(gain_per_step: float, cfg: VerificationConfig) -> float:
     """E[value of submitting fake work for one step]."""

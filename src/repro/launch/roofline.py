@@ -179,7 +179,8 @@ def analyze(compiled, hlo_text: str, *, num_chips: int,
     from repro.launch import hlo_cost
 
     cost = hlo_cost.analyze_hlo(hlo_text, total_devices=num_chips)
-    xla = compiled.cost_analysis() or {}
+    from repro import compat
+    xla = compat.cost_analysis_dict(compiled)
     r = Roofline(
         flops_per_device=cost.flops,
         bytes_per_device=cost.bytes_accessed,

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.hierarchical import get_pod_sync
 from repro.launch import mesh as mesh_lib
@@ -240,25 +241,38 @@ def make_train_step(model: Model, optimizer, mesh: Mesh,
         return step
 
     sync = get_pod_sync(opts.pod_sync, **opts.sync_kwargs)
+    # Inside the manual-pod region the batch's pod dim is already local, so
+    # activation constraints must not name "pod": old jax's partitioner
+    # hard-aborts (IsManualSubgroup) on constraints over manual axes.
+    inner_batch_axes = tuple(a for a in mesh_lib.batch_axes(mesh)
+                             if a != "pod")
 
-    def per_pod(state, batch):
-        # batch is this pod's local shard; data/model axes remain automatic
-        loss, grads = grad_fn(state.params, batch)
-        grads = sync(grads, "pod")
+    def per_pod(state, batch, pod_ids):
+        # batch is this pod's local shard; data/model axes remain automatic.
+        # pod_ids is an arange sharded over "pod", so pod_ids[0] is this
+        # pod's index — the data-derived identity compat's emulated
+        # collectives need where axis_index/all_gather can't lower (old jax
+        # partial-manual mode).
+        with shrules.activation_sharding(
+                inner_batch_axes,
+                model_axis_size=mesh_lib.axis_sizes(mesh).get("model", 1)):
+            loss, grads = grad_fn(state.params, batch)
+        grads = sync(grads, "pod", pod_index=pod_ids[0])
         loss = jax.lax.pmean(loss, "pod")
         return apply_update(state, loss, grads)
 
     def step(state, batch):
         batch_specs = _pod_batch_specs(batch)
         state_specs = jax.tree.map(lambda _: P(), state)
-        return jax.shard_map(
+        pod_ids = jnp.arange(mesh.shape["pod"], dtype=jnp.int32)
+        return compat.shard_map(
             per_pod,
             mesh=mesh,
-            in_specs=(state_specs, batch_specs),
+            in_specs=(state_specs, batch_specs, P("pod")),
             out_specs=(state_specs, {"loss": P(), "grad_norm": P()}),
-            axis_names=frozenset({"pod"}),
-            check_vma=False,
-        )(state, batch)
+            axis_names={"pod"},
+            check=False,
+        )(state, batch, pod_ids)
 
     return step
 

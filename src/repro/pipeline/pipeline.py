@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 Array = jax.Array
 
 
@@ -41,7 +43,7 @@ def spmd_pipeline(stage_fn: Callable, stage_params, xs: Array, *, axis: str = "p
     xs: (M, mb, ...) microbatches (same on every stage).
     Returns ys: (M, mb, ...) — valid on the LAST stage, zeros elsewhere.
     """
-    p = jax.lax.axis_size(axis)
+    p = compat.axis_size(axis)
     stage = jax.lax.axis_index(axis)
     m = xs.shape[0]
     ticks = num_ticks(m, p)
@@ -61,8 +63,8 @@ def spmd_pipeline(stage_fn: Callable, stage_params, xs: Array, *, axis: str = "p
         recv = jax.lax.ppermute(out, axis, perm)
         return (recv, ys), None
 
-    recv0 = jax.lax.pvary(jnp.zeros_like(xs[0]), (axis,))
-    ys0 = jax.lax.pvary(jnp.zeros_like(xs), (axis,))
+    recv0 = compat.pvary(jnp.zeros_like(xs[0]), (axis,))
+    ys0 = compat.pvary(jnp.zeros_like(xs), (axis,))
     (recv, ys), _ = jax.lax.scan(tick_fn, (recv0, ys0), jnp.arange(ticks))
     # broadcast final outputs from the last stage to everyone
     mask = (stage == p - 1).astype(ys.dtype)
@@ -85,7 +87,7 @@ def make_pipeline_apply(layer_fn: Callable, mesh: Mesh, *, axis: str = "pipe"):
     def apply(stacked_params, xs):
         fn = functools.partial(spmd_pipeline, stage_fn, axis=axis)
         spec_params = jax.tree.map(lambda _: P(axis), stacked_params)
-        return jax.shard_map(
+        return compat.shard_map(
             fn, mesh=mesh,
             in_specs=(spec_params, P()),
             out_specs=P(),

@@ -6,6 +6,11 @@ import jax.numpy as jnp
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running (subprocess compile/dry-run) tests")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

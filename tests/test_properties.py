@@ -1,0 +1,136 @@
+"""All hypothesis property tests, in one module guarded by importorskip.
+
+The seed suite imported ``hypothesis`` at the top of test_launch.py and
+test_protocol_core.py, so tier-1 died at *collection* when the package was
+missing.  Property tests now live here: without hypothesis only this module
+skips and every unit test still runs; CI installs hypothesis via
+requirements-dev.txt, so these always run there.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import assume, given, settings
+from hypothesis import strategies as st
+
+from repro.core import aggregation, compression
+from repro.core.ledger import Ledger
+from repro.core.unextractable import ShardCustody
+from repro.data.pipeline import DataConfig, lm_batch
+
+
+# =============================== aggregation ===================================
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 12), st.integers(1, 16), st.integers(0, 5))
+def test_property_agg_fixed_point(n, d, seed):
+    """All aggregators return x when every node submits the same x."""
+    x = jnp.broadcast_to(
+        jax.random.normal(jax.random.PRNGKey(seed), (d,)), (n, d))
+    for name in aggregation.AGGREGATORS:
+        kw = {"f": 1} if "krum" in name else {}
+        agg = aggregation.get_aggregator(name, **kw)(x)
+        np.testing.assert_allclose(np.asarray(agg), np.asarray(x[0]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 10), st.integers(0, 3))
+def test_property_agg_permutation_invariant(n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, 8))
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 99), n)
+    for name in ("mean", "median", "trimmed_mean", "centered_clip"):
+        a = aggregation.AGGREGATORS[name](x)
+        b = aggregation.AGGREGATORS[name](x[perm])
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 12), st.integers(0, 5))
+def test_property_masked_agg_equals_dense_subset(n, seed):
+    """The batched-engine contract: masked_agg(X, mask) == agg(X[mask])."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, 6)).astype(np.float32))
+    mask = rng.random(n) < 0.6
+    mask[rng.integers(n)] = True
+    for name in aggregation.MASKED_AGGREGATORS:
+        kw = {"f": 1} if "krum" in name else {}
+        dense = aggregation.get_aggregator(name, **kw)(x[mask])
+        masked = aggregation.get_masked_aggregator(name, **kw)(
+            x, jnp.asarray(mask))
+        np.testing.assert_allclose(np.asarray(masked), np.asarray(dense),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+# =============================== compression ===================================
+@settings(max_examples=15, deadline=None)
+@given(st.integers(8, 200), st.integers(0, 5))
+def test_property_qsgd_error_bounded(size, seed):
+    """QSGD theory: ‖x − Q(x)‖ ≤ (√d / levels) ‖x‖ (one-sigma-ish bound)."""
+    levels = 64
+    x = jax.random.normal(jax.random.PRNGKey(seed), (size,))
+    c = compression.qsgd_compress(jax.random.PRNGKey(seed + 1), x,
+                                  levels=levels)
+    y = compression.qsgd_decompress(c)
+    err = float(jnp.linalg.norm(y - x))
+    bound = (np.sqrt(size) / levels) * float(jnp.linalg.norm(x)) * 3 + 1e-6
+    assert err <= bound
+
+
+# ================================= ledger ======================================
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["a", "b", "c"]),
+                          st.floats(0.0, 10.0)), min_size=1, max_size=20))
+def test_property_ledger_conservation(events):
+    led = Ledger()
+    for node, amount in events:
+        led.record_contribution(node, amount)
+    assert led.check_conservation()
+    total = sum(a for _, a in events)
+    assert led.total_shares == pytest.approx(total)
+    for n in "abc":
+        contributed = sum(a for nn, a in events if nn == n)
+        if total:
+            assert led.ownership_fraction(n) == pytest.approx(
+                contributed / total)
+
+
+# ============================ unextractability =================================
+@settings(max_examples=10, deadline=None)
+@given(st.integers(4, 12), st.integers(2, 3), st.integers(0, 4))
+def test_property_custody_full_swarm_covers(n_nodes, redundancy, seed):
+    # feasibility: total custody slots must cover shards x redundancy
+    assume(n_nodes * math.ceil(0.6 * 16) >= 16 * redundancy)
+    nodes = [f"n{i}" for i in range(n_nodes)]
+    try:
+        c = ShardCustody.assign(nodes, 16, redundancy=redundancy, seed=seed,
+                                max_fraction=0.6)
+    except ValueError:
+        # greedy packing can strand capacity on near-tight configs —
+        # that's the documented failure mode, not a coverage bug
+        assume(False)
+    assert c.coverage(nodes) == 1.0
+    # redundancy: every shard held by `redundancy` distinct nodes
+    for holders in c.assignment.values():
+        assert len(set(holders)) == redundancy
+
+
+# ============================== data pipeline ==================================
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([1, 2, 4, 8]), st.integers(0, 20))
+def test_property_data_sharding_partitions(num_shards, step):
+    """Shards are disjoint slices whose union is the global batch."""
+    dcfg = DataConfig(vocab_size=50, seq_len=16, global_batch=8)
+    full = lm_batch(dcfg, step)["tokens"]
+    parts = [lm_batch(dcfg, step, shard=s, num_shards=num_shards)["tokens"]
+             for s in range(num_shards)]
+    assert sum(p.shape[0] for p in parts) == full.shape[0]
+    # shard determinism
+    again = lm_batch(dcfg, step, shard=0, num_shards=num_shards)["tokens"]
+    np.testing.assert_array_equal(np.asarray(parts[0]), np.asarray(again))

@@ -1,63 +1,172 @@
-"""Paper §5.5: the No-Off problem, quantified.  Sweeps the attacker
-fraction across aggregation/verification regimes and prices the derailment
-attack (the only digital emergency brake the paper identifies)."""
+"""Paper §5.5: the No-Off problem, quantified — as a *phase diagram*.
+
+Runs a ``scenarios.SweepGrid`` (attacker fractions × seeds per regime)
+through ``derailment.sweep``: the campaign engine compiles the whole grid
+into ONE device program (``lax.scan`` over rounds, ``vmap`` over runs,
+regimes fused by per-lane aggregator id, honest baselines riding along as
+count=0 lanes), then times the same grid as sequential
+``simulate_derailment`` calls and reports both as **runs/s** next to the
+engine-level rounds/s in bench_byzantine.  Also prices the attack
+(compute + slashed stakes).
+
+CLI:  ``python benchmarks/bench_derailment.py [--grid G] [--tiny] [--json F]``
+``--tiny`` runs the 4-point ``no_off_smoke`` grid with no sequential
+comparison (the CI smoke job); ``--json`` dumps rows + sweep metadata.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import time
+
 from benchmarks.common import Row
-from repro.core.derailment import attack_cost, simulate_derailment
-from repro.core.scenarios import get_scenario
+from repro.core.derailment import attack_cost, simulate_derailment, sweep
+from repro.core.scenarios import get_scenario, get_sweep_grid
+from repro.core.swarm import NodeSpec, SwarmConfig, make_swarm
 from repro.core.verification import VerificationConfig
 from repro.optim.optimizer import SGD
 
 from benchmarks.bench_byzantine import _problem
 
+#: filled by run() for the --json artifact
+LAST_SWEEP_META: dict = {}
 
-def run() -> list:
+
+def _phase_rows(res) -> list:
+    rows: list[Row] = []
+    for reg in res.grid.regimes:
+        fracs = sorted({r.attacker_fraction for r in res.results
+                        if r.regime == reg.name})
+        for frac in fracs:
+            cell = [r for r in res.results if r.regime == reg.name
+                    and abs(r.attacker_fraction - frac) < 1e-9]
+            der = sum(r.derailed for r in cell)
+            slashed = sum(r.attackers_slashed for r in cell)
+            n_att = sum(r.n_attackers for r in cell)
+            ratios = sorted(r.final_loss / max(r.baseline_loss, 1e-9)
+                            for r in cell)
+            rows.append((
+                f"nooff.{reg.name}.frac{frac:.2f}", 0.0,
+                f"derailed={der}/{len(cell)} slashed={slashed}/{n_att} "
+                f"median final/base={ratios[len(ratios) // 2]:.1f}"))
+    return rows
+
+
+def run(grid_name: str = "no_off_quick", compare_sequential: bool = True) -> list:
     rows: list[Row] = []
     loss_fn, params0, data_fn = _problem()
     eval_fn = lambda p: loss_fn(p, data_fn(0, 10_000))
     opt = SGD(lr=0.1, momentum=0.0)
+    grid = get_sweep_grid(grid_name)
+    # warm jax's one-time process machinery (eager dispatch, stack/transfer
+    # paths) out of both measurements — the sequential loop runs second and
+    # would otherwise inherit this for free
+    import jax
+    import jax.numpy as jnp
+    float(eval_fn(params0))
+    jax.block_until_ready(jnp.stack([jnp.zeros(4, jnp.float32)] * 2))
 
-    n_honest = 10
-    for agg in ["mean", "centered_clip"]:
-        for n_attack in [1, 3, 6, 12]:
-            res = simulate_derailment(
-                loss_fn, params0, opt, data_fn, eval_fn,
-                n_honest=n_honest, n_attack=n_attack, rounds=25,
-                aggregator=agg, attack="inner_product", scale=50.0)
+    # the whole phase diagram: one compiled program
+    res = sweep(loss_fn, params0, opt, data_fn, eval_fn, grid)
+    rows += _phase_rows(res)
+    n_points = len(res.results)
+    rows.append((
+        "nooff.sweep.runs_per_s", 1e6 / res.runs_per_s,
+        f"{res.runs_per_s:.1f} runs/s ({res.n_runs} runs incl baselines, "
+        f"{n_points} grid points, {res.n_programs} programs, "
+        f"{res.wall_s:.2f}s end-to-end)"))
+    LAST_SWEEP_META.update(
+        grid=grid_name, n_points=n_points, n_runs=res.n_runs,
+        n_programs=res.n_programs, sweep_wall_s=res.wall_s,
+        sweep_runs_per_s=res.runs_per_s)
+
+    if compare_sequential:
+        # the same grid as one simulate_derailment call per point, honest
+        # baseline trained once per seed and passed in (it used to be
+        # recomputed inside every call — 9 redundant training runs)
+        t0 = time.perf_counter()
+        baselines = {}
+        for seed in grid.seeds:
+            base = make_swarm(loss_fn, params0, opt,
+                              [NodeSpec(f"h{i}") for i in range(grid.n_honest)],
+                              SwarmConfig(aggregator="mean", seed=seed), data_fn)
+            baselines[seed] = base.run(grid.rounds, eval_fn=eval_fn,
+                                       eval_every=grid.rounds)[-1]
+        n_seq = 0
+        for reg in grid.regimes:
+            for count in grid.attacker_counts:
+                for scale in grid.scales:
+                    for seed in grid.seeds:
+                        simulate_derailment(
+                            loss_fn, params0, opt, data_fn, eval_fn,
+                            n_honest=grid.n_honest, n_attack=count,
+                            rounds=grid.rounds, aggregator=reg.aggregator,
+                            verification=reg.verification, attack=grid.attack,
+                            scale=scale, seed=seed,
+                            baseline_loss=baselines[seed])
+                        n_seq += 1
+        dt_seq = time.perf_counter() - t0
+        seq_rps = n_seq / dt_seq
+        speedup = dt_seq / res.wall_s
+        rows.append(("nooff.sequential.runs_per_s", 1e6 / seq_rps,
+                     f"{seq_rps:.1f} runs/s ({n_seq} simulate_derailment "
+                     f"calls + {len(grid.seeds)} shared baselines, "
+                     f"{dt_seq:.2f}s)"))
+        rows.append(("nooff.sweep.speedup", 0.0,
+                     f"{speedup:.1f}x end-to-end vs sequential for "
+                     f"{n_points} points (target >=10x)"))
+        LAST_SWEEP_META.update(sequential_wall_s=dt_seq,
+                               sequential_runs_per_s=seq_rps,
+                               speedup=speedup)
+
+        # near-perfect verification neutralizes the off-switch (§5.5) —
+        # the single-point path, reusing the shared baseline
+        v = VerificationConfig(p_check=1.0, stake=5.0, tolerance=1e-3)
+        r = simulate_derailment(
+            loss_fn, params0, opt, data_fn, eval_fn,
+            n_honest=grid.n_honest, n_attack=6, rounds=grid.rounds,
+            aggregator="mean", verification=v, attack=grid.attack,
+            baseline_loss=baselines[grid.seeds[0]])
+        rows.append((f"nooff.verified.frac{r.attacker_fraction:.2f}", 0.0,
+                     f"derailed={r.derailed} slashed={r.attackers_slashed}/6 "
+                     "(derailment neutralized => only physical off remains)"))
+
+        # the registry's worst-case regime: 40% collusion vs CC + audits
+        scn = get_scenario("derailment_stress")
+        swarm = scn.build_swarm(loss_fn, params0, opt, data_fn, n_nodes=15)
+        losses = swarm.run(grid.rounds, eval_fn=eval_fn,
+                           eval_every=grid.rounds - 1)
+        rows.append(("nooff.scenario.derailment_stress", 0.0,
+                     f"final_loss={losses[-1]:.3f} "
+                     f"slashed={len(swarm.slashed)}/"
+                     f"{sum(1 for n in swarm.nodes if n.byzantine)}"))
+
+        # attack economics
+        for ver in [None, v]:
+            cost = attack_cost(6, rounds=grid.rounds,
+                               compute_cost_per_round=1.0, verification=ver)
             rows.append((
-                f"nooff.{agg}.frac{res.attacker_fraction:.2f}", 0.0,
-                f"derailed={res.derailed} "
-                f"final/base={res.final_loss / max(res.baseline_loss, 1e-9):.1f}"))
-
-    # with near-perfect verification the off-switch stops working (§5.5)
-    v = VerificationConfig(p_check=1.0, stake=5.0, tolerance=1e-3)
-    res = simulate_derailment(
-        loss_fn, params0, opt, data_fn, eval_fn,
-        n_honest=n_honest, n_attack=6, rounds=25,
-        aggregator="mean", verification=v, attack="inner_product")
-    rows.append(("nooff.verified.frac0.38", 0.0,
-                 f"derailed={res.derailed} slashed={res.attackers_slashed}/6 "
-                 "(derailment neutralized => only physical off remains)"))
-
-    # the registry's worst-case regime: 40% collusion vs CC + audits (§5.5)
-    scn = get_scenario("derailment_stress")
-    swarm = scn.build_swarm(loss_fn, params0, opt, data_fn, n_nodes=15)
-    losses = swarm.run(25, eval_fn=eval_fn, eval_every=24)
-    rows.append(("nooff.scenario.derailment_stress", 0.0,
-                 f"final_loss={losses[-1]:.3f} "
-                 f"slashed={len(swarm.slashed)}/{sum(1 for n in swarm.nodes if n.byzantine)}"))
-
-    # attack economics
-    for n_attack, ver in [(6, None), (6, v)]:
-        cost = attack_cost(n_attack, rounds=25, compute_cost_per_round=1.0,
-                           verification=ver)
-        rows.append((
-            f"nooff.attack_cost.{'verified' if ver else 'unverified'}", 0.0,
-            f"{cost:.0f} units (compute{'+stakes' if ver else ' only'})"))
+                f"nooff.attack_cost.{'verified' if ver else 'unverified'}", 0.0,
+                f"{cost:.0f} units (compute{'+stakes' if ver else ' only'})"))
     return rows
 
 
 if __name__ == "__main__":
     from benchmarks.common import emit
-    emit(run())
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--grid", default="no_off_quick")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: no_off_smoke grid, sweep only")
+    ap.add_argument("--json", default=None, metavar="FILE",
+                    help="dump rows + sweep metadata as JSON")
+    args = ap.parse_args()
+
+    grid_name = "no_off_smoke" if args.tiny else args.grid
+    rows = run(grid_name=grid_name, compare_sequential=not args.tiny)
+    emit(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": [{"name": n, "us_per_call": us, "derived": d}
+                               for n, us, d in rows],
+                       "sweep": LAST_SWEEP_META}, f, indent=2)

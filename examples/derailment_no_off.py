@@ -1,9 +1,11 @@
 """The No-Off Problem (§5.5), measured: can a derailment attack — the one
 *digital* emergency brake — actually halt a protocol-learning run?
 
-Sweeps attacker fraction × aggregation × verification on a real (small) LM
-and prints the paper's qualitative table with numbers attached, plus the
-attack's price tag.
+One ``derailment.sweep`` call compiles the whole phase diagram — attacker
+fraction × seed for every (aggregator, verification) regime, honest
+baselines included — into a single device program (``lax.scan`` over
+rounds, ``vmap`` over runs) on a real (small) LM, then prints the paper's
+qualitative table with numbers attached, plus the attack's price tag.
 
     PYTHONPATH=src python examples/derailment_no_off.py
 """
@@ -12,11 +14,8 @@ import argparse
 import jax
 
 from repro.configs import get_config
-from repro.core.derailment import (
-    attack_cost,
-    no_off_report,
-    simulate_derailment,
-)
+from repro.core.derailment import attack_cost, no_off_report, sweep
+from repro.core.scenarios import Regime, SweepGrid
 from repro.core.verification import VerificationConfig
 from repro.data.pipeline import DataConfig, data_fn_for_swarm, model_batch
 from repro.models.model import build_model
@@ -26,14 +25,18 @@ from repro.optim.optimizer import SGD
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="seeds per phase-diagram cell")
     args = ap.parse_args()
 
+    # small enough that the whole phase diagram (counts x regimes lanes,
+    # each lane an 18-node swarm) sweeps in minutes on a 2-core CPU box
     cfg = get_config("protocol-125m").reduced(
-        num_layers=2, d_model=128, num_heads=4, head_dim=32, d_ff=512,
-        vocab_size=512)
+        num_layers=2, d_model=64, num_heads=4, head_dim=16, d_ff=256,
+        vocab_size=256)
     model = build_model(cfg)
     n_honest = 8
-    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
                       global_batch=32)
     params = model.init(jax.random.PRNGKey(0))
     loss_fn = lambda p, b: model.loss(p, b)[0]
@@ -42,37 +45,37 @@ def main():
     opt = SGD(lr=0.5, momentum=0.9)
 
     vcfg = VerificationConfig(p_check=0.5, stake=10.0, tolerance=1e-3)
-    results = []
-    print("running derailment sweep on the batched swarm engine "
-          "(this trains a small LM repeatedly)...")
-    # one shared honest baseline for every cell (it would otherwise be
-    # recomputed 9x) — the registry's honest_baseline scenario
-    from repro.core.scenarios import get_scenario
-    base_swarm = get_scenario("honest_baseline").build_swarm(
-        loss_fn, params, opt, data_fn, n_nodes=n_honest)
-    baseline_loss = base_swarm.run(args.rounds, eval_fn=eval_fn,
-                                   eval_every=args.rounds)[-1]
-    print(f"  honest baseline loss after {args.rounds} rounds: "
-          f"{baseline_loss:.3f}")
-    for aggregator, verification in [("mean", None),
-                                     ("centered_clip", None),
-                                     ("mean", vcfg)]:
-        for n_attack in [1, 4, 10]:
-            res = simulate_derailment(
-                loss_fn, params, opt, data_fn, eval_fn,
-                n_honest=n_honest, n_attack=n_attack, rounds=args.rounds,
-                aggregator=aggregator, verification=verification,
-                attack="inner_product", scale=20.0,
-                baseline_loss=baseline_loss)
-            results.append(res)
-            print(f"  {aggregator:14s} verified={verification is not None!s:5s} "
-                  f"attackers={n_attack:2d} -> derailed={res.derailed}")
+    grid = SweepGrid(
+        name="no_off_lm",
+        description="§5.5 table on a real (small) LM",
+        regimes=(Regime("mean", "mean"),
+                 Regime("centered_clip", "centered_clip"),
+                 Regime("mean+verified", "mean", verification=vcfg)),
+        n_honest=n_honest,
+        attacker_counts=(1, 4, 10),
+        seeds=tuple(range(args.seeds)),
+        scales=(20.0,),
+        rounds=args.rounds,
+    )
 
-    print("\n== §5.5 No-Off table ==")
-    print(no_off_report(results))
+    print(f"running the {grid.n_points}-point derailment phase diagram as "
+          "one compiled program (this trains a small LM "
+          f"{grid.n_points + len(grid.seeds)} times on device)...")
+    res = sweep(loss_fn, params, opt, data_fn, eval_fn, grid)
+    print(f"  {res.n_runs} runs (incl {len(grid.seeds)} shared honest "
+          f"baselines) in {res.n_programs} program, {res.wall_s:.1f}s "
+          f"-> {res.runs_per_s:.2f} runs/s")
+
+    print("\n== §5.5 phase diagram (derailed seeds / total, s = attackers "
+          "slashed) ==")
+    print(res.phase_table())
+
+    print("\n== per-cell detail ==")
+    print(no_off_report(sorted(res.results,
+                               key=lambda r: (r.regime, r.attacker_fraction))))
 
     print("\n== attack economics ==")
-    for n_attack in [4, 10]:
+    for n_attack in (4, 10):
         c_unv = attack_cost(n_attack, args.rounds, compute_cost_per_round=1.0,
                             verification=None)
         c_ver = attack_cost(n_attack, args.rounds, compute_cost_per_round=1.0,

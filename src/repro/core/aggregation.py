@@ -144,6 +144,12 @@ def centered_clip(updates: Array, *, clip_tau: float | None = None,
 # ``updates[mask]`` (property-tested in tests/test_scenarios.py).  The shared
 # tricks: NaN-padding + ``nanmedian`` for medians, +inf-padding + rank masks
 # for order statistics with a *traced* kept-count k.
+#
+# Numeric keyword arguments (``trim``, ``f``, ``m``, ``clip_tau``) accept
+# traced jax scalars, so the campaign engine can vmap one compiled program
+# over per-run values (e.g. krum's f tracking each run's attacker count).
+# Structural kwargs (``iters``; ``clip_tau=None`` meaning "adaptive") stay
+# static — they change the traced graph, not just its inputs.
 
 
 def _masked_median(updates: Array, mask: Array) -> Array:
@@ -196,11 +202,13 @@ def masked_krum(updates: Array, mask: Array, *, f: int = 1) -> Array:
 def masked_multi_krum(updates: Array, mask: Array, *, f: int = 1, m: int = 0) -> Array:
     n = updates.shape[0]
     k_act = jnp.sum(mask.astype(jnp.int32))
-    # clamp a static m to the kept count: score-sorted masked rows sit at the
-    # end but hold real (corrupted/stale) updates, so selecting past k_act
-    # would silently average them in (the dense twin fails loudly instead)
-    m_eff = (jnp.clip(jnp.asarray(m), 1, k_act) if m
-             else jnp.maximum(k_act - f - 2, 1))
+    # clamp m to the kept count: score-sorted masked rows sit at the end but
+    # hold real (corrupted/stale) updates, so selecting past k_act would
+    # silently average them in (the dense twin fails loudly instead).
+    # m may be a traced scalar; only a *static* 0/None means "auto".
+    auto = m is None or (not isinstance(m, jax.Array) and m == 0)
+    m_eff = (jnp.maximum(k_act - f - 2, 1) if auto
+             else jnp.clip(jnp.asarray(m), 1, k_act))
     scores = _masked_krum_scores(updates, mask, f)
     order = jnp.argsort(scores)                          # best first, masked last
     sel = (jnp.arange(n) < m_eff)[:, None]

@@ -112,6 +112,10 @@ def topk_with_error_feedback(x: Array, error: Array, *, k_frac: float = 0.01):
 def powersgd_compress(key, x: Array, *, rank: int = 4, iters: int = 1) -> Compressed:
     """Low-rank (subspace-iteration) approximation of a 2-D tensor."""
     assert x.ndim == 2, "powersgd applies to matrices"
+    if iters < 1:
+        # the left factor p only exists after the first projection — iters=0
+        # used to escape the loop with p unbound (UnboundLocalError)
+        raise ValueError(f"powersgd needs iters >= 1, got {iters}")
     m, n = x.shape
     xf = x.astype(jnp.float32)
     q = jax.random.normal(key, (n, rank), jnp.float32)
@@ -132,13 +136,21 @@ def powersgd_decompress(c: Compressed) -> Array:
     return (c.payload["p"] @ c.payload["q"].T).reshape(c.orig_shape)
 
 
+WIRE_CODECS = (None, "qsgd", "topk", "powersgd")
+
+
 def roundtrip(kind: Optional[str], key, x: Array, **kwargs) -> Array:
     """Lossy wire round-trip: what the receiver reconstructs from ``x``.
 
     ``kind=None`` is the uncompressed wire (identity).  Pure function of
     ``(kind, key, x)`` — jit- and vmap-safe, so the batched swarm engine
     round-trips all N node gradients in one ``jax.vmap`` call over per-node
-    keys.  QSGD is the only stochastic codec; the key is ignored by the rest.
+    keys.  The key seeds QSGD's stochastic rounding and PowerSGD's subspace
+    init; top-k ignores it.
+
+    PowerSGD natively compresses matrices; non-2-D payloads (the swarm's
+    flat gradients) are zero-padded onto the squarest 2-D grid, compressed,
+    and sliced back — sizes are static, so this stays jit/vmap-safe.
     """
     if kind is None:
         return x
@@ -146,7 +158,18 @@ def roundtrip(kind: Optional[str], key, x: Array, **kwargs) -> Array:
         return qsgd_decompress(qsgd_compress(key, x, **kwargs))
     if kind == "topk":
         return topk_decompress(topk_compress(x, **kwargs))
-    raise ValueError(f"unknown wire codec: {kind!r}")
+    if kind == "powersgd":
+        if x.ndim == 2:
+            return powersgd_decompress(powersgd_compress(key, x, **kwargs))
+        flat = x.reshape(-1)
+        d = flat.size
+        cols = int(math.ceil(math.sqrt(d)))
+        rows = int(math.ceil(d / cols))
+        grid = jnp.pad(flat, (0, rows * cols - d)).reshape(rows, cols)
+        out = powersgd_decompress(powersgd_compress(key, grid, **kwargs))
+        return out.reshape(-1)[:d].reshape(x.shape)
+    raise ValueError(f"unknown wire codec: {kind!r} "
+                     f"(roundtrip carries: {WIRE_CODECS})")
 
 
 DECOMPRESSORS = {

@@ -12,19 +12,39 @@ on the aggregation rule and the verification regime:
 - near-perfect cheap verification     → derailment is slashed away faster
   than it damages; the paper concludes only physical intervention remains.
 
-``simulate_derailment`` measures this on a real training run;
-``attack_cost`` prices the attack (compute + slashed stakes); ``no_off_report``
-assembles the paper's qualitative table quantitatively.
+``simulate_derailment`` measures one point on a real training run;
+``sweep`` measures the whole **phase diagram** — every (attacker fraction,
+scale, seed) cell of every (aggregator, verification) regime of a
+``scenarios.SweepGrid`` — as **one** compiled device program (the campaign
+engine: ``lax.scan`` over rounds, ``vmap`` over runs, regimes fused by
+per-lane aggregator id and traced audit rate).
+``attack_cost`` prices the attack (compute + slashed stakes);
+``no_off_report`` assembles the paper's qualitative table quantitatively.
 """
 from __future__ import annotations
 
+import functools
+import time
 from dataclasses import dataclass
-from typing import Optional
+from typing import Dict, List, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.swarm import NodeSpec, SwarmConfig, make_swarm
+from repro.core.scenarios import Regime, SweepGrid
+from repro.core.swarm import (
+    BEHAVIOUR_CODES,
+    LaneParams,
+    NodeSpec,
+    SwarmConfig,
+    make_swarm,
+    run_campaign,
+    stack_lanes,
+)
 from repro.core.verification import VerificationConfig
+
+_FAR = np.iinfo(np.int32).max
 
 
 @dataclass(frozen=True)
@@ -37,6 +57,8 @@ class DerailmentResult:
     attackers_slashed: int
     n_attackers: int
     init_loss: Optional[float] = None
+    seed: int = 0
+    regime: str = ""
 
     @property
     def derailed(self) -> bool:
@@ -67,6 +89,13 @@ def simulate_derailment(loss_fn, init_params, optimizer, data_fn, eval_fn, *,
                         attack: str = "inner_product", scale: float = 50.0,
                         baseline_loss: Optional[float] = None,
                         seed: int = 0, engine: str = "batched") -> DerailmentResult:
+    """Measure a single derailment point.
+
+    Pass ``baseline_loss`` when sweeping many points against one honest
+    baseline — otherwise *each call* re-trains the honest swarm from
+    scratch.  For whole phase diagrams use :func:`sweep`, which shares the
+    baseline and compiles every point of every regime into one program.
+    """
     init_loss = float(eval_fn(init_params))
     nodes = make_swarm_nodes(n_honest, n_attack, attack, scale)
     cfg = SwarmConfig(aggregator=aggregator, verification=verification, seed=seed,
@@ -91,7 +120,189 @@ def simulate_derailment(loss_fn, init_params, optimizer, data_fn, eval_fn, *,
         attackers_slashed=sum(1 for s in swarm.slashed if s.startswith("adv")),
         n_attackers=n_attack,
         init_loss=init_loss,
+        seed=seed,
+        regime=aggregator + ("+verified" if verification else ""),
     )
+
+
+# -- the phase-diagram sweep -----------------------------------------------------
+@dataclass
+class SweepResult:
+    """Every cell of a :class:`~repro.core.scenarios.SweepGrid`, plus how it
+    was compiled (``n_programs`` device programs for ``n_runs`` runs —
+    baseline lanes included) and how long the whole sweep took."""
+    grid: SweepGrid
+    results: List[DerailmentResult]
+    n_programs: int
+    n_runs: int
+    wall_s: float
+
+    @property
+    def runs_per_s(self) -> float:
+        return self.n_runs / max(self.wall_s, 1e-9)
+
+    def phase_table(self) -> str:
+        """The §5.5 phase diagram: derailed-seed counts per (regime,
+        attacker fraction) cell, attackers-slashed appended when any."""
+        fracs = sorted({r.attacker_fraction for r in self.results})
+        head = "regime".ljust(22) + "".join(f"frac={f:.2f}".rjust(12)
+                                            for f in fracs)
+        lines = [head]
+        for reg in self.grid.regimes:
+            cells = []
+            for f in fracs:
+                cell = [r for r in self.results
+                        if r.regime == reg.name
+                        and abs(r.attacker_fraction - f) < 1e-9]
+                if not cell:
+                    cells.append("-".rjust(12))
+                    continue
+                der = sum(r.derailed for r in cell)
+                txt = f"{der}/{len(cell)}"
+                slashed = sum(r.attackers_slashed for r in cell)
+                if slashed:
+                    txt += f" s{slashed}"
+                cells.append(txt.rjust(12))
+            lines.append(reg.name.ljust(22) + "".join(cells))
+        return "\n".join(lines)
+
+
+@functools.lru_cache(maxsize=None)
+def _seed_key(seed: int):
+    return jax.random.PRNGKey(seed)
+
+
+def _sweep_lane(n_total: int, n_honest: int, count: int, code: int,
+                scale: float, seed: int,
+                v: Optional[VerificationConfig],
+                agg_id: int, agg_kwargs: Dict) -> LaneParams:
+    """One run lane: honest nodes first, ``count`` attackers, then padding
+    that never joins (all regimes share a fixed N so they vmap together).
+    Node indices — and therefore the fold_in key schedule — match the
+    single-run ``Swarm`` built by ``simulate_derailment`` exactly.  Leaves
+    are host (numpy) arrays — a sweep builds hundreds of lanes and
+    ``stack_lanes`` moves each stacked field to device once."""
+    codes = np.zeros(n_total, np.int32)
+    codes[n_honest:n_honest + count] = code
+    scales = np.full(n_total, 10.0, np.float32)     # NodeSpec default
+    scales[n_honest:n_honest + count] = scale
+    joins = np.zeros(n_total, np.int32)
+    joins[n_honest + count:] = _FAR                  # padding: never active
+    return LaneParams(
+        codes=codes,
+        scales=scales,
+        speeds=np.ones(n_total, np.float32),
+        joins=joins,
+        leaves=np.full(n_total, _FAR, np.int32),
+        base_key=_seed_key(seed),
+        p_check=np.float32(v.p_check if v else 0.0),
+        tolerance=np.float32(v.tolerance if v else 1.0),
+        numeric_noise=np.float32(v.numeric_noise if v else 0.0),
+        agg_id=np.int32(agg_id),
+        agg_kwargs={k: np.asarray(x) for k, x in agg_kwargs.items()},
+    )
+
+
+def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
+          grid: SweepGrid, *, rounds: Optional[int] = None,
+          fast_compile: Optional[bool] = None) -> SweepResult:
+    """Measure a whole §5.5 phase diagram as **one** compiled device program.
+
+    Every (regime × attacker count × scale × seed) cell is a lane of a
+    single campaign: verification differences ride in the traced
+    ``p_check``/``tolerance`` lanes (``p_check=0`` disables audits),
+    aggregator differences in the ``agg_id`` lane of a multi-aggregator
+    round (the gradient / corruption / audit machinery — the bulk of the
+    compile cost — is shared), and the honest baseline rides along as extra
+    ``count=0`` lanes, computed once per seed instead of once per point.
+
+    ``fast_compile=None`` decides automatically: tiny models (≤ 4096
+    params) are compile-bound, so they get XLA's fast/low-optimization
+    backend (~3x faster compiles, bit-identical here); larger models are
+    runtime-bound and keep full optimization — the unfused fast path costs
+    far more in memory traffic than it saves in compilation (see
+    :func:`~repro.core.swarm.run_campaign`).
+
+    ``data_fn`` and ``eval_fn`` must be jax-traceable (the fold_in-keyed
+    pipelines in this repo all are).  Each result lane reproduces the
+    single-point :func:`simulate_derailment` run for the same parameters —
+    property-tested in ``tests/test_campaign.py``.
+    """
+    rounds = grid.rounds if rounds is None else rounds
+    if fast_compile is None:
+        n_params = sum(l.size for l in jax.tree.leaves(init_params))
+        fast_compile = n_params <= 4096
+    t0 = time.perf_counter()
+    init_loss = float(eval_fn(init_params))
+    n_honest = grid.n_honest
+    n_total = n_honest + max(grid.attacker_counts)
+    code = BEHAVIOUR_CODES[grid.attack]
+
+    # the aggregator set shared by the fused program; the honest baseline is
+    # a mean-aggregated run, so make sure plain mean is in the set
+    agg_specs: List[Tuple[str, Dict]] = []
+    agg_index: Dict[Tuple, int] = {}
+    for reg in list(grid.regimes) + [Regime("baseline", "mean")]:
+        key = (reg.aggregator, tuple(sorted(reg.agg_kwargs.items())))
+        if key not in agg_index:
+            agg_index[key] = len(agg_specs)
+            agg_specs.append((reg.aggregator, dict(reg.agg_kwargs)))
+    # krum aggregators read a traced per-run f (tracking the attacker count,
+    # as simulate_derailment does); the traced-kwargs dict must be present
+    # on every lane whenever any aggregator in the set wants it
+    need_f = any("krum" in name and "f" not in kw for name, kw in agg_specs)
+
+    def traced_kw(count):
+        return {"f": max(1, count)} if need_f else {}
+
+    lanes, metas = [], []
+    for reg in grid.regimes:
+        aid = agg_index[(reg.aggregator, tuple(sorted(reg.agg_kwargs.items())))]
+        for count in grid.attacker_counts:
+            for scale in grid.scales:
+                for seed in grid.seeds:
+                    lanes.append(_sweep_lane(
+                        n_total, n_honest, count, code, scale, seed,
+                        reg.verification, aid, traced_kw(count)))
+                    metas.append((reg, count, scale, seed))
+    for seed in grid.seeds:                 # baseline lanes (count = 0)
+        lanes.append(_sweep_lane(n_total, n_honest, 0, code, 0.0, seed,
+                                 None, agg_index[("mean", ())], traced_kw(0)))
+        metas.append((None, 0, 0.0, seed))
+
+    state, recs, final = run_campaign(
+        loss_fn, init_params, optimizer, data_fn, stack_lanes(lanes),
+        rounds=rounds,
+        aggregator=agg_specs if len(agg_specs) > 1 else agg_specs[0][0],
+        agg_kwargs=agg_specs[0][1] if len(agg_specs) == 1 else None,
+        verify=any(reg.verification is not None for reg in grid.regimes),
+        eval_fn=eval_fn, fast_compile=fast_compile)
+    slashed = np.asarray(state.slashed)
+    final = np.asarray(final)
+
+    results_raw = []
+    baselines: Dict[int, float] = {}
+    for j, (reg, count, scale, seed) in enumerate(metas):
+        if reg is None:
+            baselines[seed] = float(final[j])
+        else:
+            results_raw.append((reg, count, scale, seed, float(final[j]),
+                                int(slashed[j, n_honest:n_honest + count].sum())))
+
+    results = [DerailmentResult(
+        attacker_fraction=count / (n_honest + count),
+        aggregator=reg.aggregator,
+        verified=reg.verification is not None,
+        final_loss=final_loss,
+        baseline_loss=baselines[seed],
+        attackers_slashed=n_slashed,
+        n_attackers=count,
+        init_loss=init_loss,
+        seed=seed,
+        regime=reg.name,
+    ) for reg, count, scale, seed, final_loss, n_slashed in results_raw]
+    return SweepResult(grid=grid, results=results, n_programs=1,
+                       n_runs=len(lanes), wall_s=time.perf_counter() - t0)
 
 
 # -- economics -------------------------------------------------------------------

@@ -28,6 +28,14 @@ Usage::
 Every scenario guarantees at least one active honest node in round 0, so
 ``swarm.step(0)`` never raises.  Custom scenarios register with
 :func:`register_scenario`.
+
+Two campaign-level registries sit on top:
+
+- :func:`scenario_campaign` runs one scenario across many seeds as a single
+  compiled program (the scanned swarm round vmapped over per-seed lanes);
+- :class:`SweepGrid` (``register_sweep_grid`` / ``get_sweep_grid``) names
+  the §5.5 derailment phase-diagram grids consumed by
+  ``core.derailment.sweep`` (documented in ``docs/no_off.md``).
 """
 from __future__ import annotations
 
@@ -37,7 +45,14 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.swarm import NodeSpec, SwarmConfig, make_swarm
+from repro.core.swarm import (
+    NodeSpec,
+    SwarmConfig,
+    lane_for_nodes,
+    make_swarm,
+    run_campaign,
+    stack_lanes,
+)
 from repro.core.verification import VerificationConfig
 
 
@@ -218,4 +233,125 @@ register_scenario(Scenario(
         verification=VerificationConfig(p_check=0.25, stake=10.0,
                                         tolerance=1e-3, jackpot=5.0),
         seed=seed),
+))
+
+
+# -- campaigns over scenarios ----------------------------------------------------
+def scenario_campaign(name: str, loss_fn, params, optimizer, data_fn, *,
+                      n_nodes: Optional[int] = None, seeds: Tuple[int, ...] = (0,),
+                      rounds: int, eval_fn: Optional[Callable] = None):
+    """Run one scenario across many seeds as a **single compiled program** —
+    the scanned swarm round vmapped over per-seed lanes.
+
+    Returns ``(state, records, final_losses, node_ids, cfg)``: every output
+    leaf carries a leading seed axis (lane *k* is ``seeds[k]``), and lane
+    *k* reproduces the single-run ``Swarm`` history for the same (scenario,
+    seed) — see ``swarm.history_from_records`` / ``swarm.ledger_from_run``
+    for turning a lane back into host-side history and ledger.
+    """
+    scn = get_scenario(name)
+    nodes, cfg = scn.build(n_nodes, seeds[0])
+    lanes = stack_lanes([lane_for_nodes(nodes, scn.make_config(s))
+                         for s in seeds])
+    state, recs, final = run_campaign(
+        loss_fn, params, optimizer, data_fn, lanes, rounds=rounds,
+        aggregator=cfg.aggregator, agg_kwargs=cfg.agg_kwargs,
+        compression_kind=cfg.compression,
+        compression_kwargs=cfg.compression_kwargs,
+        verify=cfg.verification is not None, eval_fn=eval_fn)
+    return state, recs, final, [n.node_id for n in nodes], cfg
+
+
+# -- derailment sweep grids (§5.5 phase diagrams) --------------------------------
+@dataclass(frozen=True)
+class Regime:
+    """One (aggregator, verification) column of the §5.5 phase diagram.
+
+    ``agg_kwargs`` are *static* aggregator kwargs (baked per program);
+    per-run traced kwargs (krum's ``f`` tracking the attacker count) are
+    added by ``derailment.sweep`` itself.
+    """
+    name: str
+    aggregator: str
+    agg_kwargs: Dict = field(default_factory=dict)
+    verification: Optional[VerificationConfig] = None
+
+
+@dataclass(frozen=True)
+class SweepGrid:
+    """A named derailment sweep: the cartesian grid (attacker counts ×
+    scales × seeds) per regime that ``derailment.sweep`` compiles into one
+    device program per distinct (aggregator, static kwargs) group."""
+    name: str
+    description: str
+    regimes: Tuple[Regime, ...]
+    n_honest: int = 10
+    attacker_counts: Tuple[int, ...] = (1, 3, 6, 12)
+    seeds: Tuple[int, ...] = (0, 1, 2)
+    scales: Tuple[float, ...] = (50.0,)
+    attack: str = "inner_product"
+    rounds: int = 25
+
+    @property
+    def n_points(self) -> int:
+        return (len(self.regimes) * len(self.attacker_counts)
+                * len(self.scales) * len(self.seeds))
+
+
+SWEEP_GRIDS: Dict[str, SweepGrid] = {}
+
+
+def register_sweep_grid(grid: SweepGrid) -> SweepGrid:
+    SWEEP_GRIDS[grid.name] = grid
+    return grid
+
+
+def get_sweep_grid(name: str) -> SweepGrid:
+    try:
+        return SWEEP_GRIDS[name]
+    except KeyError:
+        raise KeyError(f"unknown sweep grid {name!r}; "
+                       f"registered: {list_sweep_grids()}") from None
+
+
+def list_sweep_grids() -> List[str]:
+    return sorted(SWEEP_GRIDS)
+
+
+_AUDIT = VerificationConfig(p_check=0.25, stake=10.0, tolerance=1e-3,
+                            jackpot=5.0)
+_PERFECT_AUDIT = VerificationConfig(p_check=1.0, stake=5.0, tolerance=1e-3,
+                                    jackpot=5.0)
+
+register_sweep_grid(SweepGrid(
+    name="no_off_quick",
+    description=("The benchmark grid: 4 attacker fractions x 3 seeds x "
+                 "2 regimes (mean / CenteredClip+audits) = 24 runs in one "
+                 "fused compiled program."),
+    regimes=(Regime("mean", "mean"),
+             Regime("centered_clip+audit", "centered_clip",
+                    verification=_AUDIT)),
+))
+
+register_sweep_grid(SweepGrid(
+    name="no_off_phase",
+    description=("The paper's full §5.5 table: mean (off-switch works), "
+                 "CenteredClip (breakdown point), and mean under "
+                 "near-perfect verification (derailment slashed away).  "
+                 "All three regimes fuse into one program — p_check is a "
+                 "traced lane, the aggregator a per-lane id."),
+    regimes=(Regime("mean", "mean"),
+             Regime("centered_clip", "centered_clip"),
+             Regime("mean+verified", "mean", verification=_PERFECT_AUDIT)),
+))
+
+register_sweep_grid(SweepGrid(
+    name="no_off_smoke",
+    description="CI smoke: 2 counts x 1 seed x 2 regimes = 4 tiny runs.",
+    regimes=(Regime("mean", "mean"),
+             Regime("centered_clip", "centered_clip")),
+    n_honest=6,
+    attacker_counts=(2, 6),
+    seeds=(0,),
+    rounds=8,
 ))

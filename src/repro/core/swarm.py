@@ -17,15 +17,28 @@ Plus the §4 mechanisms: stake/slash verification audits and the ownership
 ledger.  Runs on CPU with a real (small) model; the aggregation math is
 identical at any scale.
 
+The round itself is a **pure functional core**: :class:`SwarmState` (params,
+optimizer state, slashed mask, per-node contribution counters) advanced by
+the ``round_fn`` built with :func:`make_round_fn`, parameterized by a
+:class:`LaneParams` pytree of per-run traced values (behaviour codes,
+byzantine scales, membership windows, PRNG base key, audit rate/tolerance,
+and any traced aggregator kwargs).  The core has **no host round-trips** —
+slashing and contribution minting happen on device, and the host-side
+:class:`~repro.core.ledger.Ledger` is reconstructed from the device counters
+after a run.  That makes two compositions possible:
+
+- :func:`scan_rounds` — ``lax.scan`` the round over the round axis, so a
+  whole training run is one device program;
+- :func:`run_campaign` — additionally ``vmap`` over a leading *campaign*
+  axis of stacked :class:`LaneParams`, so a full parameter sweep (attacker
+  fractions × scales × seeds, per aggregator regime) is **one** compiled
+  program (see ``core.derailment.sweep``).
+
 Two engines share one API (``step``/``run``/``history``/``ledger``):
 
-- :class:`Swarm` — the default **batched engine**.  One jitted round computes
-  all N node gradients with ``jax.vmap(jax.grad(loss_fn))``, corruption as a
-  vectorized ``lax.switch`` over per-node behaviour codes, the wire codec as a
-  ``vmap`` over per-node keys, audits via ``verification.audit_batch``, and
-  aggregation through the mask-aware aggregators in ``core.aggregation``.
-  Membership and slashing are a boolean active-mask, so the jitted round has a
-  **fixed shape across rounds** — churn never triggers recompilation.
+- :class:`Swarm` — the default **batched engine**, now a thin wrapper over
+  the functional core: ``step`` invokes one jitted core round; ``run``
+  dispatches the scanned core when the data function is traceable.
 - :class:`SequentialSwarm` — the original per-node Python loop, kept as the
   readable reference oracle the batched engine is equivalence-tested against.
 
@@ -36,8 +49,10 @@ the same ``agg_norm`` history (within fp32 reduction-order tolerance).
 """
 from __future__ import annotations
 
+import functools
+import inspect
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Set
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence, Set
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +65,7 @@ from repro.core.verification import VerificationConfig, audit_batch, audit_flat
 Array = jax.Array
 
 #: Byzantine behaviours, indexed by the code used in the vectorized
-#: ``lax.switch`` corruption table.  Code 0 is honest (identity).
+#: corruption table (``_corrupt_all``).  Code 0 is honest (identity).
 BEHAVIOURS = ("honest", "sign_flip", "scale", "noise", "zero", "inner_product")
 BEHAVIOUR_CODES: Dict[str, int] = {name: i for i, name in enumerate(BEHAVIOURS)}
 
@@ -60,6 +75,8 @@ BEHAVIOUR_CODES: Dict[str, int] = {name: i for i, name in enumerate(BEHAVIOURS)}
 # in their randomness (and keeps the batched round free of host-side key
 # chains that would serialize it).
 _CORRUPT, _WIRE, _AUDIT_SEL, _AUDIT_NOISE = range(4)
+
+_FAR = np.iinfo(np.int32).max
 
 
 def _node_key(base: Array, purpose: int, rnd, node_idx) -> Array:
@@ -94,14 +111,14 @@ class SwarmConfig:
     aggregator: str = "centered_clip"
     agg_kwargs: Dict = field(default_factory=dict)
     verification: Optional[VerificationConfig] = None
-    compression: Optional[str] = None    # None|"qsgd"|"topk"
+    compression: Optional[str] = None    # None|"qsgd"|"topk"|"powersgd"
     compression_kwargs: Dict = field(default_factory=dict)
     seed: int = 0
 
 
 def corrupt(kind: str, grad_flat: Array, honest_mean: Array, scale: float, key) -> Array:
     """Scalar (single-node) corruption table — the reference the vectorized
-    ``lax.switch`` table below must match branch for branch."""
+    ``_corrupt_all`` table below must match branch for branch."""
     if kind == "sign_flip":
         return -scale * grad_flat
     if kind == "scale":
@@ -116,18 +133,354 @@ def corrupt(kind: str, grad_flat: Array, honest_mean: Array, scale: float, key) 
     raise ValueError(kind)
 
 
-# Vectorized corruption: branch b is BEHAVIOURS[b]; applied per node under
-# vmap as lax.switch(code, branches, grad, honest_mean, scale, key).
-_CORRUPT_BRANCHES = (
-    lambda g, hm, s, k: g,                                        # honest
-    lambda g, hm, s, k: -s * g,                                   # sign_flip
-    lambda g, hm, s, k: s * g,                                    # scale
-    lambda g, hm, s, k: g + s * jax.random.normal(k, g.shape),    # noise
-    lambda g, hm, s, k: jnp.zeros_like(g),                        # zero
-    lambda g, hm, s, k: -s * hm,                                  # inner_product
-)
+def _corrupt_all(codes: Array, gf: Array, honest_mean: Array, scales: Array,
+                 keys: Array) -> Array:
+    """Vectorized corruption table: every behaviour evaluated on the whole
+    (N, D) stack, selected per node by code — branch for branch equal to
+    :func:`corrupt`.  Written as arithmetic selects rather than a vmapped
+    ``lax.switch``: with per-node codes vmap evaluates every branch anyway,
+    and the flat form is measurably cheaper to trace and compile inside the
+    scanned campaign round (sweeps are compile-bound)."""
+    noise = jax.vmap(lambda k, g: jax.random.normal(k, g.shape))(keys, gf)
+    c, s = codes[:, None], scales[:, None]
+    out = jnp.where(c == BEHAVIOUR_CODES["sign_flip"], -s * gf, gf)
+    out = jnp.where(c == BEHAVIOUR_CODES["scale"], s * gf, out)
+    out = jnp.where(c == BEHAVIOUR_CODES["noise"], gf + s * noise, out)
+    out = jnp.where(c == BEHAVIOUR_CODES["zero"], 0.0, out)
+    out = jnp.where(c == BEHAVIOUR_CODES["inner_product"],
+                    -s * honest_mean[None], out)
+    return out
 
 
+# ============================ functional core ==================================
+class LaneParams(NamedTuple):
+    """Per-run traced parameters of the functional round.
+
+    Every field is a jax array, so a *campaign* is simply a LaneParams whose
+    leaves carry a leading run axis (see :func:`stack_lanes`) vmapped by
+    :func:`run_campaign`.  Roster fields have shape (N,); audit fields are
+    scalars (``p_check == 0`` disables auditing even when the round was built
+    with ``verify=True``); ``agg_id`` selects this run's aggregator when the
+    round was built with several (0 otherwise); ``agg_kwargs`` holds *traced*
+    aggregator keyword arguments (e.g. a per-run krum ``f`` or centered-clip
+    ``clip_tau``) — static kwargs go to :func:`make_round_fn` instead.
+    """
+    codes: Array          # (N,) int32 behaviour codes (BEHAVIOUR_CODES)
+    scales: Array         # (N,) f32 byzantine scales
+    speeds: Array         # (N,) f32 capacity -> minted shares per kept round
+    joins: Array          # (N,) int32 join round (inclusive)
+    leaves: Array         # (N,) int32 leave round (exclusive; _FAR = never)
+    base_key: Array       # PRNG key — the per-run seed
+    p_check: Array        # () f32 audit probability (0 = never audited)
+    tolerance: Array      # () f32 audit relative-mismatch tolerance
+    numeric_noise: Array  # () f32 simulated cross-stack nondeterminism
+    agg_id: Array         # () int32 index into the round's aggregator set
+    agg_kwargs: Dict[str, Array]  # traced per-run aggregator kwargs
+
+
+class SwarmState(NamedTuple):
+    """The carry of the scanned round: everything that evolves across rounds
+    lives on device, so a run never round-trips to the host."""
+    params: Any           # model parameters (pytree)
+    opt_state: Any        # optimizer state (pytree)
+    slashed: Array        # (N,) bool — caught by an audit in a prior round
+    contrib: Array        # (N,) f32 — speed-weighted kept rounds (mint counter)
+
+
+class RoundRecord(NamedTuple):
+    """Per-round outputs stacked by ``lax.scan`` (leading round axis)."""
+    n_active: Array       # () int32
+    n_byzantine: Array    # () int32
+    caught: Array         # (N,) bool — slashed in *this* round
+    keep: Array           # (N,) bool — active & not caught (minted this round)
+    agg_norm: Array       # () f32
+
+
+def lane_for_nodes(nodes: Sequence[NodeSpec], cfg: SwarmConfig, *,
+                   agg_kwargs: Optional[Dict] = None) -> LaneParams:
+    """Build the single-run :class:`LaneParams` for a node roster + config."""
+    v = cfg.verification
+    return LaneParams(
+        codes=jnp.asarray([n.behaviour_code for n in nodes], jnp.int32),
+        scales=jnp.asarray([n.byzantine_scale for n in nodes], jnp.float32),
+        speeds=jnp.asarray([n.speed for n in nodes], jnp.float32),
+        joins=jnp.asarray([n.join_round for n in nodes], jnp.int32),
+        leaves=jnp.asarray([_FAR if n.leave_round is None else n.leave_round
+                            for n in nodes], jnp.int32),
+        base_key=jax.random.PRNGKey(cfg.seed),
+        p_check=jnp.asarray(v.p_check if v else 0.0, jnp.float32),
+        tolerance=jnp.asarray(v.tolerance if v else 1.0, jnp.float32),
+        numeric_noise=jnp.asarray(v.numeric_noise if v else 0.0, jnp.float32),
+        agg_id=jnp.asarray(0, jnp.int32),
+        agg_kwargs={k: jnp.asarray(x) for k, x in (agg_kwargs or {}).items()},
+    )
+
+
+def stack_lanes(lanes: Sequence[LaneParams]) -> LaneParams:
+    """Stack single-run lanes into a campaign (leading run axis on every
+    leaf).  All lanes must share N and the same ``agg_kwargs`` keys."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)
+
+
+def init_state(params, optimizer, n_nodes: int) -> SwarmState:
+    return SwarmState(params=params, opt_state=optimizer.init(params),
+                      slashed=jnp.zeros(n_nodes, bool),
+                      contrib=jnp.zeros(n_nodes, jnp.float32))
+
+
+def _accepted_kwargs(name: str) -> frozenset:
+    """Keyword names a masked aggregator understands (for routing the shared
+    traced ``lane.agg_kwargs`` dict in multi-aggregator rounds)."""
+    sig = inspect.signature(aggregation.MASKED_AGGREGATORS[name])
+    return frozenset(p.name for p in sig.parameters.values()
+                     if p.kind is inspect.Parameter.KEYWORD_ONLY)
+
+
+def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *,
+                  aggregator, agg_kwargs: Optional[Dict] = None,
+                  compression_kind: Optional[str] = None,
+                  compression_kwargs: Optional[Dict] = None,
+                  verify: bool = False) -> Callable:
+    """Build the pure round: ``round_fn(lane, state, rnd, batches) ->
+    (state, RoundRecord)``.
+
+    Static structure (aggregator choice, static agg kwargs, wire codec,
+    whether the audit branch exists at all) is baked here; everything
+    per-run lives in ``lane`` as traced arrays, so one trace serves every
+    lane of a campaign.  ``batches`` is a pytree with leading node axis N.
+
+    ``aggregator`` is either one name (static ``agg_kwargs`` apply to it;
+    traced ``lane.agg_kwargs`` pass through verbatim) or a sequence of
+    ``(name, static_kwargs)`` pairs — then every aggregator is evaluated and
+    ``lane.agg_id`` selects the result per run, which lets a whole
+    multi-regime phase diagram share **one** compiled program (the gradient
+    / corruption / audit machinery — the bulk of the compile cost — is
+    compiled once).  In that mode each aggregator receives only the
+    ``lane.agg_kwargs`` entries its signature accepts.
+    """
+    leaves = jax.tree.leaves(params_template)
+    treedef = jax.tree.structure(params_template)
+    shapes = [(l.shape, l.dtype) for l in leaves]
+    if isinstance(aggregator, str):
+        agg_specs = [(aggregator, dict(agg_kwargs or {}))]
+        route_kwargs = False
+    else:
+        if agg_kwargs:
+            raise ValueError("pass per-aggregator static kwargs inside the "
+                             "(name, kwargs) pairs, not via agg_kwargs")
+        agg_specs = [(name, dict(kw)) for name, kw in aggregator]
+        route_kwargs = True
+    # in routed mode an aggregator's *static* kwargs win over same-named
+    # traced lane kwargs (call-time kwargs would silently override the
+    # functools.partial baked ones otherwise — e.g. a krum regime pinned to
+    # f=4 must not pick up the per-lane f meant for the auto-f krum regime)
+    agg_fns = [(aggregation.get_masked_aggregator(name, **kw),
+                _accepted_kwargs(name) - set(kw)) for name, kw in agg_specs]
+    ckw = dict(compression_kwargs or {})
+    grad_fn = jax.grad(loss_fn)
+    idx = jnp.arange(n_nodes)
+
+    def flatten_stack(tree) -> Array:
+        """pytree with leading node axis -> (N, D) fp32 matrix."""
+        return jnp.concatenate([l.reshape(n_nodes, -1).astype(jnp.float32)
+                                for l in jax.tree.leaves(tree)], axis=1)
+
+    def unflatten(vec: Array):
+        out, off = [], 0
+        for shape, dtype in shapes:
+            size = int(np.prod(shape)) if shape else 1
+            out.append(vec[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
+    def wire(key, g):
+        return compression.roundtrip(compression_kind, key, g, **ckw)
+
+    def round_fn(lane: LaneParams, state: SwarmState, rnd, batches):
+        active = (lane.joins <= rnd) & (rnd < lane.leaves) & (~state.slashed)
+        nact = jnp.sum(active.astype(jnp.float32))
+
+        grads = jax.vmap(grad_fn, in_axes=(None, 0))(state.params, batches)
+        gf = flatten_stack(grads)                                 # (N, D)
+        maskf = active.astype(jnp.float32)[:, None]
+        honest_mean = jnp.sum(gf * maskf, axis=0) / jnp.maximum(nact, 1.0)
+
+        # the whole (purpose, round, node) fold_in schedule in three batched
+        # call sites — same keys as _node_key per (purpose, rnd, i), but the
+        # compiler sees 3 threefry kernels instead of 12 (sweeps are
+        # compile-bound, and threefry dominates the round's compile cost)
+        pk = jax.vmap(lambda p: jax.random.fold_in(lane.base_key, p))(
+            jnp.arange(4))
+        rk = jax.vmap(lambda k: jax.random.fold_in(k, rnd))(pk)
+        allk = jax.vmap(lambda k: jax.vmap(
+            lambda i: jax.random.fold_in(k, i))(idx))(rk)         # (4, N, 2)
+        ck, wk, sk, nk = allk[_CORRUPT], allk[_WIRE], \
+            allk[_AUDIT_SEL], allk[_AUDIT_NOISE]
+        corrupted = _corrupt_all(lane.codes, gf, honest_mean, lane.scales, ck)
+
+        submitted = jax.vmap(wire)(wk, corrupted)
+
+        caught = jnp.zeros(n_nodes, bool)
+        if verify:                           # static: baked at trace time
+            # audit rate / tolerance / noise are *traced* (array-valued
+            # VerificationConfig fields), so one program serves lanes with
+            # different p_check — including p_check == 0 (never audited).
+            vcfg = VerificationConfig(p_check=lane.p_check,
+                                      tolerance=lane.tolerance,
+                                      numeric_noise=lane.numeric_noise)
+            sel = jax.vmap(jax.random.uniform)(sk)
+            audited = active & (sel < lane.p_check)
+            # the validator recomputes the honest gradient and re-encodes it
+            # with the submitter's wire key (see SequentialSwarm.step)
+            recomputed = jax.vmap(wire)(wk, gf)
+            passes, _ = audit_batch(submitted, recomputed, nk, vcfg)
+            caught = audited & (~passes)
+        keep = active & (~caught)
+
+        if route_kwargs:
+            outs = [fn(submitted, keep,
+                       **{k: v for k, v in lane.agg_kwargs.items() if k in acc})
+                    for fn, acc in agg_fns]
+            agg = jnp.stack(outs)[lane.agg_id] if len(outs) > 1 else outs[0]
+        else:
+            agg = agg_fns[0][0](submitted, keep, **lane.agg_kwargs)
+        any_keep = jnp.any(keep)
+        agg = jnp.where(any_keep, agg, jnp.zeros_like(agg))
+        new_params, new_opt = jax.lax.cond(
+            any_keep,
+            lambda p, o: optimizer.update(unflatten(agg), o, p),
+            lambda p, o: (p, o),
+            state.params, state.opt_state)
+
+        new_state = SwarmState(
+            params=new_params, opt_state=new_opt,
+            slashed=state.slashed | caught,
+            contrib=state.contrib + lane.speeds * keep.astype(jnp.float32))
+        rec = RoundRecord(
+            n_active=jnp.sum(active).astype(jnp.int32),
+            n_byzantine=jnp.sum(active & (lane.codes > 0)).astype(jnp.int32),
+            caught=caught, keep=keep, agg_norm=jnp.linalg.norm(agg))
+        return new_state, rec
+
+    return round_fn
+
+
+def scan_rounds(round_fn: Callable, lane: LaneParams, state: SwarmState,
+                rounds: int, batch_fn: Callable,
+                eval_fn: Optional[Callable] = None):
+    """``lax.scan`` the pure round over ``rounds`` — one device program per
+    run.  ``batch_fn(rnd)`` must be traceable and return the leading-N batch
+    stack; ``eval_fn(params)``, if given, is evaluated once on the final
+    params inside the program.  Returns ``(state, RoundRecord-stacked,
+    final_loss)``."""
+    def body(st, rnd):
+        return round_fn(lane, st, rnd, batch_fn(rnd))
+
+    state, recs = jax.lax.scan(body, state, jnp.arange(rounds))
+    final = eval_fn(state.params) if eval_fn is not None else jnp.zeros(())
+    return state, recs, final
+
+
+def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
+                 lanes: LaneParams, *, rounds: int, aggregator,
+                 agg_kwargs: Optional[Dict] = None,
+                 compression_kind: Optional[str] = None,
+                 compression_kwargs: Optional[Dict] = None,
+                 verify: bool = False, eval_fn: Optional[Callable] = None,
+                 batched_data_fn: Optional[Callable] = None,
+                 fast_compile: bool = False):
+    """Run a whole campaign — ``vmap`` over the leading run axis of ``lanes``
+    of the scanned round — as **one** jit-compiled device program.
+
+    All lanes share the aggregator set (and its static kwargs), the wire
+    codec, the data stream, and the initial params; they differ in
+    everything :class:`LaneParams` carries (roster behaviour/membership,
+    seed, audit rate/tolerance, aggregator id, traced agg kwargs).
+    Per-round data is computed once and broadcast across lanes (it does not
+    depend on the lane), so a campaign costs one gradient batch per (round,
+    node) per *lane* but only one data generation per (round, node).
+
+    ``data_fn(node_idx, rnd)`` (or ``batched_data_fn(rnd)``) and ``eval_fn``
+    must be jax-traceable.  ``fast_compile=True`` asks XLA for backend
+    optimization level 0 — measured ~3x faster compiles with bit-identical
+    results on CPU; it silently falls back to a normal jit if this
+    jax/backend rejects the option.  Only use it for *tiny* models, where
+    campaigns are compile-bound: on real models the unfused code pays far
+    more in per-op memory traffic than it saves in compilation (measured
+    ~4x slower end-to-end on the small-LM example).
+    ``derailment.sweep`` picks this automatically by parameter count.
+
+    Returns ``(final SwarmState, RoundRecord, final losses)`` with a leading
+    run axis on every output leaf (RoundRecord leaves are (R, T, ...)).
+    """
+    n = int(lanes.codes.shape[-1])
+    round_fn = make_round_fn(
+        loss_fn, optimizer, params0, n, aggregator=aggregator,
+        agg_kwargs=agg_kwargs, compression_kind=compression_kind,
+        compression_kwargs=compression_kwargs, verify=verify)
+    if batched_data_fn is None:
+        def batch_fn(rnd):
+            return jax.vmap(lambda i: data_fn(i, rnd))(jnp.arange(n))
+    else:
+        batch_fn = batched_data_fn
+    state0 = init_state(params0, optimizer, n)
+
+    def one_run(lane):
+        return scan_rounds(round_fn, lane, state0, rounds, batch_fn, eval_fn)
+
+    fn = jax.jit(jax.vmap(one_run))
+    if fast_compile:
+        try:
+            return fn.lower(lanes).compile(
+                compiler_options={"xla_backend_optimization_level": "0"})(lanes)
+        except Exception:
+            pass
+    return fn(lanes)
+
+
+def history_from_records(recs: RoundRecord, node_ids: Sequence[str], *,
+                         start_round: int = 0) -> List[dict]:
+    """Rebuild the per-round host history from one run's stacked records."""
+    n_active = np.asarray(recs.n_active)
+    n_byz = np.asarray(recs.n_byzantine)
+    caught = np.asarray(recs.caught)
+    agg = np.asarray(recs.agg_norm)
+    return [{
+        "round": start_round + t,
+        "n_active": int(n_active[t]),
+        "n_byzantine": int(n_byz[t]),
+        "caught": [node_ids[int(i)] for i in np.flatnonzero(caught[t])],
+        "agg_norm": float(agg[t]),
+    } for t in range(agg.shape[0])]
+
+
+def ledger_from_run(state: SwarmState, node_ids: Sequence[str],
+                    verification: Optional[VerificationConfig] = None,
+                    validator: str = "validator") -> Ledger:
+    """Reconstruct the ownership :class:`Ledger` from device counters.
+
+    Equivalent to the per-round host bookkeeping of ``Swarm.step``: a node's
+    balance is its speed-weighted kept rounds; a slashed node's pre-catch
+    mints are forfeited (its counter froze at the catch round) and its stake
+    burns, paying the validator jackpot.
+    """
+    led = Ledger()
+    if verification is not None:
+        for nid in node_ids:
+            led.stake(nid, verification.stake)
+    contrib = np.asarray(state.contrib)
+    slashed = np.asarray(state.slashed)
+    for nid, c in zip(node_ids, contrib):
+        if c > 0:
+            led.record_contribution(nid, float(c))
+    for i in np.flatnonzero(slashed):
+        led.slash(node_ids[int(i)])
+        if verification is not None:
+            led.pay_jackpot(validator, verification.jackpot)
+    return led
+
+
+# ================================ engines ======================================
 class _SwarmBase:
     """State, ledger plumbing, and the run() loop shared by both engines."""
 
@@ -153,9 +506,10 @@ class _SwarmBase:
         raise NotImplementedError
 
     def _unflatten(self, vec: Array):
-        """Flat fp32 vector -> params-shaped pytree (set up by each engine:
-        lazily from the first gradient in SequentialSwarm, from params at
-        __init__ in Swarm — both structures are identical)."""
+        """Flat fp32 vector -> params-shaped pytree.  Only SequentialSwarm
+        uses this (set up lazily from its first gradient); the batched
+        engine's functional core carries its own (un)flatten pair built
+        from the params template in make_round_fn."""
         out, off = [], 0
         for shape, dtype in self._flat_shapes:
             size = int(np.prod(shape)) if shape else 1
@@ -286,10 +640,11 @@ class SequentialSwarm(_SwarmBase):
 class Swarm(_SwarmBase):
     """Batched, jit-compiled protocol-learning engine (the default).
 
-    One device program per round, fixed (N, D) shapes forever:
+    A thin wrapper over the functional core (:func:`make_round_fn`): one
+    device program per round, fixed (N, D) shapes forever:
 
     - gradients: ``jax.vmap(jax.grad(loss_fn))`` over stacked per-node batches;
-    - corruption: vectorized ``lax.switch`` over per-node behaviour codes;
+    - corruption: the vectorized select table over per-node behaviour codes;
     - wire codec: ``vmap`` of ``compression.roundtrip`` over per-node keys;
     - audits: ``verification.audit_batch`` on the full stack, gated by a
       per-node audit-selection mask;
@@ -299,6 +654,15 @@ class Swarm(_SwarmBase):
     Inactive nodes still occupy a lane (their gradient is computed and then
     masked) — that is the price of a churn-proof compiled round, and it is
     why this engine is O(1) dispatches per round instead of O(N).
+
+    ``run`` with no ``eval_fn`` dispatches the **scanned** core — the whole
+    run is one ``lax.scan`` device program with zero per-round host
+    round-trips; the host history and ledger are rebuilt from device
+    counters afterwards.  (Requires ``data_fn``/``batched_data_fn`` to be
+    jax-traceable; otherwise it falls back to the per-round ``step`` loop.
+    Note the scanned path cannot raise mid-run if audits slash the last
+    active node — such rounds aggregate to zero instead, exactly as a
+    fully-audited-out round does.)
 
     ``batched_data_fn(rnd) -> batch-with-leading-N-axis`` skips the per-node
     host stacking loop when the data pipeline can produce a stacked batch
@@ -310,85 +674,55 @@ class Swarm(_SwarmBase):
         super().__init__(loss_fn, params, optimizer, nodes, cfg, data_fn)
         self.batched_data_fn = batched_data_fn
         n = len(self.nodes)
-        self._codes = jnp.asarray([s.behaviour_code for s in self.nodes], jnp.int32)
-        self._scales = jnp.asarray([s.byzantine_scale for s in self.nodes], jnp.float32)
-        far = np.iinfo(np.int32).max
+        self._lane = lane_for_nodes(self.nodes, cfg)
         self._joins_np = np.asarray([s.join_round for s in self.nodes], np.int32)
         self._leaves_np = np.asarray(
-            [far if s.leave_round is None else s.leave_round for s in self.nodes],
+            [_FAR if s.leave_round is None else s.leave_round for s in self.nodes],
             np.int32)
-        self._joins = jnp.asarray(self._joins_np)
-        self._leaves = jnp.asarray(self._leaves_np)
         self._slashed_np = np.zeros(n, bool)
-        leaves = jax.tree.leaves(self.params)
-        self._treedef = jax.tree.structure(self.params)
-        self._flat_shapes = [(l.shape, l.dtype) for l in leaves]
-        self._round_fn = jax.jit(self._round)
+        self._core = make_round_fn(
+            loss_fn, optimizer, self.params, n,
+            aggregator=cfg.aggregator, agg_kwargs=cfg.agg_kwargs,
+            compression_kind=cfg.compression,
+            compression_kwargs=cfg.compression_kwargs,
+            verify=cfg.verification is not None)
+        self._round_fn = jax.jit(functools.partial(self._core, self._lane))
+        self._scan_cache: Dict[int, Callable] = {}
+        self._batches_traceable: Optional[bool] = None
 
     # -- helpers ----------------------------------------------------------------
-    def _flatten_stack(self, tree) -> Array:
-        """pytree with leading node axis -> (N, D) fp32 matrix."""
-        n = len(self.nodes)
-        return jnp.concatenate([l.reshape(n, -1).astype(jnp.float32)
-                                for l in jax.tree.leaves(tree)], axis=1)
-
     def _stack_batches(self, rnd: int):
         if self.batched_data_fn is not None:
             return self.batched_data_fn(rnd)
         per_node = [self.data_fn(i, rnd) for i in range(len(self.nodes))]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *per_node)
 
-    # -- the jitted round --------------------------------------------------------
-    def _round(self, params, opt_state, batches, rnd, slashed_mask):
-        cfg = self.cfg
+    def _traced_batch_fn(self) -> Callable:
+        if self.batched_data_fn is not None:
+            return self.batched_data_fn
         n = len(self.nodes)
-        active = (self._joins <= rnd) & (rnd < self._leaves) & (~slashed_mask)
-        nact = jnp.sum(active.astype(jnp.float32))
+        return lambda rnd: jax.vmap(lambda i: self.data_fn(i, rnd))(jnp.arange(n))
 
-        grads = jax.vmap(jax.grad(self.loss_fn), in_axes=(None, 0))(params, batches)
-        gf = self._flatten_stack(grads)                               # (N, D)
-        maskf = active.astype(jnp.float32)[:, None]
-        honest_mean = jnp.sum(gf * maskf, axis=0) / jnp.maximum(nact, 1.0)
+    def _state(self) -> SwarmState:
+        return SwarmState(params=self.params, opt_state=self.opt_state,
+                          slashed=jnp.asarray(self._slashed_np),
+                          contrib=jnp.zeros(len(self.nodes), jnp.float32))
 
-        idx = jnp.arange(n)
-        ck = jax.vmap(lambda i: _node_key(self._base_key, _CORRUPT, rnd, i))(idx)
-        wk = jax.vmap(lambda i: _node_key(self._base_key, _WIRE, rnd, i))(idx)
-        corrupted = jax.vmap(
-            lambda c, g, s, k: jax.lax.switch(c, _CORRUPT_BRANCHES,
-                                              g, honest_mean, s, k)
-        )(self._codes, gf, self._scales, ck)
-
-        def wire(key, g):
-            return compression.roundtrip(cfg.compression, key, g,
-                                         **cfg.compression_kwargs)
-
-        submitted = jax.vmap(wire)(wk, corrupted)
-
-        caught = jnp.zeros(n, bool)
-        if cfg.verification:                      # static: baked at trace time
-            v = cfg.verification
-            sel = jax.vmap(lambda i: jax.random.uniform(
-                _node_key(self._base_key, _AUDIT_SEL, rnd, i)))(idx)
-            audited = active & (sel < v.p_check)
-            # the validator recomputes the honest gradient and re-encodes it
-            # with the submitter's wire key (see SequentialSwarm.step)
-            recomputed = jax.vmap(wire)(wk, gf)
-            nk = jax.vmap(lambda i: _node_key(self._base_key, _AUDIT_NOISE,
-                                              rnd, i))(idx)
-            passes, _ = audit_batch(submitted, recomputed, nk, v)
-            caught = audited & (~passes)
-        keep = active & (~caught)
-
-        agg = aggregation.get_masked_aggregator(
-            cfg.aggregator, **cfg.agg_kwargs)(submitted, keep)
-        any_keep = jnp.any(keep)
-        agg = jnp.where(any_keep, agg, jnp.zeros_like(agg))
-        new_params, new_opt = jax.lax.cond(
-            any_keep,
-            lambda p, o: self.optimizer.update(self._unflatten(agg), o, p),
-            lambda p, o: (p, o),
-            params, opt_state)
-        return new_params, new_opt, caught, keep, jnp.linalg.norm(agg)
+    def _can_scan(self, rounds: int) -> bool:
+        """Scanned run needs a traceable batch fn and a membership schedule
+        that never goes empty (the step loop raises at the exact round)."""
+        r = np.arange(rounds)[:, None]
+        sched = ((self._joins_np[None] <= r) & (r < self._leaves_np[None])
+                 & ~self._slashed_np[None])
+        if not sched.any(axis=1).all():
+            return False
+        if self._batches_traceable is None:
+            try:
+                jax.eval_shape(self._traced_batch_fn(), jnp.asarray(0, jnp.int32))
+                self._batches_traceable = True
+            except Exception:
+                self._batches_traceable = False
+        return self._batches_traceable
 
     # -- one round ----------------------------------------------------------------
     def step(self, rnd: int) -> dict:
@@ -398,17 +732,16 @@ class Swarm(_SwarmBase):
             raise RuntimeError(f"round {rnd}: no active nodes")
 
         batches = self._stack_batches(rnd)
-        self.params, self.opt_state, caught, keep, agg_norm = self._round_fn(
-            self.params, self.opt_state, batches, rnd,
-            jnp.asarray(self._slashed_np))
+        state, core_rec = self._round_fn(self._state(), rnd, batches)
+        self.params, self.opt_state = state.params, state.opt_state
 
         caught_ids = []
-        for i in np.flatnonzero(np.asarray(caught)):
+        for i in np.flatnonzero(np.asarray(core_rec.caught)):
             node = self.nodes[int(i)]
             self._slash(node)
             self._slashed_np[int(i)] = True
             caught_ids.append(node.node_id)
-        for i in np.flatnonzero(np.asarray(keep)):
+        for i in np.flatnonzero(np.asarray(core_rec.keep)):
             node = self.nodes[int(i)]
             self.ledger.record_contribution(node.node_id, node.speed)
 
@@ -418,10 +751,41 @@ class Swarm(_SwarmBase):
             "n_byzantine": int(sum(1 for i in np.flatnonzero(active_np)
                                    if self.nodes[int(i)].byzantine)),
             "caught": caught_ids,
-            "agg_norm": float(agg_norm),
+            "agg_norm": float(core_rec.agg_norm),
         }
         self.history.append(rec)
         return rec
+
+    # -- the scanned run ---------------------------------------------------------
+    def run(self, rounds: int, eval_fn: Optional[Callable] = None,
+            eval_every: int = 10):
+        if eval_fn is None and self._can_scan(rounds):
+            self._run_scanned(rounds)
+            return []
+        return super().run(rounds, eval_fn, eval_every)
+
+    def _run_scanned(self, rounds: int) -> None:
+        if rounds not in self._scan_cache:
+            core, batch_fn = self._core, self._traced_batch_fn()
+            self._scan_cache[rounds] = jax.jit(
+                lambda lane, st: scan_rounds(core, lane, st, rounds, batch_fn))
+        was_slashed = self._slashed_np.copy()
+        state, recs, _ = self._scan_cache[rounds](self._lane, self._state())
+        self.params, self.opt_state = state.params, state.opt_state
+        # run() numbers rounds from 0 on every call (same as the step loop)
+        self.history.extend(history_from_records(
+            recs, [n.node_id for n in self.nodes]))
+        # Ledger from device counters — mints first, then this run's slashes,
+        # so a slashed node's pre-catch mints are forfeited exactly as in the
+        # per-round step path (its contrib counter froze at the catch round).
+        contrib = np.asarray(state.contrib)
+        for i, node in enumerate(self.nodes):
+            if contrib[i] > 0:
+                self.ledger.record_contribution(node.node_id, float(contrib[i]))
+        for i in np.flatnonzero(np.asarray(state.slashed) & ~was_slashed):
+            node = self.nodes[int(i)]
+            self._slash(node)
+            self._slashed_np[int(i)] = True
 
 
 ENGINES: Dict[str, type] = {"batched": Swarm, "sequential": SequentialSwarm}

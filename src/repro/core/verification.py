@@ -24,12 +24,21 @@ Array = jax.Array
 
 @dataclass(frozen=True)
 class VerificationConfig:
-    p_check: float = 0.1            # probability a given update is audited
-    stake: float = 10.0             # capital locked per contributor
-    reward_per_step: float = 1.0    # shares minted per verified step
-    tolerance: float = 1e-3         # relative mismatch tolerated (nondeterminism)
-    jackpot: float = 5.0            # validator reward for a catch
-    numeric_noise: float = 1e-5     # simulated cross-stack nondeterminism
+    """Audit-game parameters.
+
+    ``p_check`` / ``tolerance`` / ``numeric_noise`` may be **array-valued**
+    (including jax tracers): the swarm campaign engine sweeps them as traced
+    per-run lanes, so one compiled program serves every audit regime —
+    ``p_check == 0`` disables auditing.  ``stake`` / ``jackpot`` /
+    ``reward_per_step`` are host-side economics consumed by the ledger and
+    stay Python floats.
+    """
+    p_check: "float | Array" = 0.1   # probability a given update is audited
+    stake: float = 10.0              # capital locked per contributor
+    reward_per_step: float = 1.0     # shares minted per verified step
+    tolerance: "float | Array" = 1e-3   # relative mismatch tolerated
+    jackpot: float = 5.0             # validator reward for a catch
+    numeric_noise: "float | Array" = 1e-5  # simulated cross-stack nondeterminism
 
 
 def relative_mismatch(claimed, recomputed) -> Array:
@@ -39,20 +48,36 @@ def relative_mismatch(claimed, recomputed) -> Array:
     return jnp.linalg.norm(c - r) / jnp.maximum(jnp.linalg.norm(r), 1e-30)
 
 
+def _perturbed(recomputed, key: Array, cfg: VerificationConfig):
+    """Add the simulated cross-stack numeric spread to a recomputed pytree.
+
+    The key is ``fold_in``-ed per leaf — one shared key would draw the *same*
+    noise pattern on every same-shaped leaf (correlated "nondeterminism",
+    unlike the independent per-node keys ``audit_flat`` receives), which
+    systematically under-disperses the mismatch statistic on multi-leaf
+    trees.  Leaf i of a flattened (single-leaf) tree sees exactly the noise
+    ``audit_flat`` would draw from ``fold_in(key, 0)``.
+    """
+    leaves, treedef = jax.tree.flatten(recomputed)
+    noisy = [
+        x + cfg.numeric_noise
+        * jax.random.normal(jax.random.fold_in(key, i), x.shape, jnp.float32)
+        * jnp.linalg.norm(x.astype(jnp.float32)) / np.sqrt(max(1, x.size))
+        for i, x in enumerate(leaves)
+    ]
+    return jax.tree.unflatten(treedef, noisy)
+
+
 def audit(claimed, recompute_fn: Callable[[], object], cfg: VerificationConfig,
           key: Array) -> tuple[bool, Array]:
     """Recompute the work and compare.  Returns (passes, mismatch).
 
     ``recompute_fn`` re-runs the gradient; simulated nondeterminism is added
-    so honest work shows a small nonzero mismatch — the tolerance must
-    absorb it (paper: proofs fail precisely because this spread exists).
+    (one independent draw per leaf — see :func:`_perturbed`) so honest work
+    shows a small nonzero mismatch — the tolerance must absorb it (paper:
+    proofs fail precisely because this spread exists).
     """
-    recomputed = recompute_fn()
-    noisy = jax.tree.map(
-        lambda x: x + cfg.numeric_noise * jax.random.normal(key, x.shape, jnp.float32)
-        * jnp.linalg.norm(x.astype(jnp.float32)) / np.sqrt(max(1, x.size)),
-        recomputed,
-    )
+    noisy = _perturbed(recompute_fn(), key, cfg)
     mm = relative_mismatch(claimed, noisy)
     return bool(mm <= cfg.tolerance), mm
 

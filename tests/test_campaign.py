@@ -1,0 +1,267 @@
+"""Campaign engine coverage: scan-over-rounds + vmap-over-runs.
+
+The load-bearing property: **lane k of a vmapped campaign reproduces the
+single-run ``Swarm`` for the same (scenario, seed)** — same agg_norm
+history, same caught sets, same minted contributions — across scenario
+regimes including verification, compression, churn, and heterogeneous
+capacity.  Plus: the ``derailment.sweep`` phase-diagram API (one compiled
+program, baseline sharing, equivalence with ``simulate_derailment``) and
+traced aggregator kwargs / multi-aggregator rounds.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation
+from repro.core.derailment import simulate_derailment, sweep
+from repro.core.scenarios import (
+    SweepGrid,
+    get_scenario,
+    get_sweep_grid,
+    list_sweep_grids,
+    scenario_campaign,
+)
+from repro.core.swarm import (
+    NodeSpec,
+    SwarmConfig,
+    history_from_records,
+    lane_for_nodes,
+    ledger_from_run,
+    make_swarm,
+    run_campaign,
+    stack_lanes,
+)
+from repro.optim.optimizer import SGD
+
+from conftest import tiny_quadratic_problem
+
+ROUNDS = 15
+SEEDS = (0, 1, 2)
+
+
+def _lane_slice(tree, k):
+    return jax.tree.map(lambda x: x[k], tree)
+
+
+# --------------------- lane k == single-run Swarm ------------------------------
+# >= 3 scenarios, including verification (audit_heavy), a lossy wire
+# (compressed_wire), churn (high_churn_elastic), and speed-weighted minting
+# (heterogeneous_speed).
+@pytest.mark.parametrize("scenario", [
+    "sign_flip_minority",
+    "audit_heavy",
+    "compressed_wire",
+    "high_churn_elastic",
+    "heterogeneous_speed",
+])
+def test_campaign_lane_matches_single_run_swarm(scenario):
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    state, recs, _, node_ids, cfg = scenario_campaign(
+        scenario, loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn,
+        n_nodes=8, seeds=SEEDS, rounds=ROUNDS)
+
+    for k, seed in enumerate(SEEDS):
+        # the reference: a fresh Swarm stepped round by round on the host
+        swarm = get_scenario(scenario).build_swarm(
+            loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn,
+            n_nodes=8, seed=seed)
+        for r in range(ROUNDS):
+            swarm.step(r)
+
+        hist = history_from_records(_lane_slice(recs, k), node_ids)
+        assert [h["n_active"] for h in hist] == \
+            [h["n_active"] for h in swarm.history]
+        assert [h["n_byzantine"] for h in hist] == \
+            [h["n_byzantine"] for h in swarm.history]
+        assert [h["caught"] for h in hist] == \
+            [h["caught"] for h in swarm.history]
+        np.testing.assert_allclose(
+            [h["agg_norm"] for h in hist],
+            [h["agg_norm"] for h in swarm.history],
+            rtol=2e-3, atol=1e-5, err_msg=f"{scenario} seed {seed}")
+
+        led = ledger_from_run(_lane_slice(state, k), node_ids,
+                              verification=cfg.verification)
+        assert led.balances == pytest.approx(swarm.ledger.balances)
+        assert led.burned_stake == pytest.approx(swarm.ledger.burned_stake)
+
+
+def test_campaign_slashes_on_device():
+    """Slashing is part of the device carry: once caught, a node stays out
+    for the rest of the scanned run and its contribution counter freezes."""
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    state, recs, _, node_ids, cfg = scenario_campaign(
+        "audit_heavy", loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn,
+        n_nodes=8, seeds=(0,), rounds=20)
+    slashed = np.asarray(state.slashed[0])
+    caught = np.asarray(recs.caught[0])               # (T, N)
+    assert slashed.any()
+    for i in np.flatnonzero(slashed):
+        t_caught = int(np.flatnonzero(caught[:, i])[0])
+        keep = np.asarray(recs.keep[0][:, i])
+        assert not keep[t_caught:].any()              # never kept again
+        assert np.asarray(state.contrib[0][i]) == keep[:t_caught].sum()
+
+
+# ----------------------------- sweep API ---------------------------------------
+def _quad_sweep(grid, **kw):
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    eval_fn = lambda p: loss_fn(p, data_fn(0, 10_000))
+    return sweep(loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn,
+                 eval_fn, grid, **kw), (loss_fn, params0, data_fn, eval_fn)
+
+
+def test_sweep_smoke_grid_phase_diagram():
+    """The registered smoke grid: one program, mean derails past its 0
+    breakdown point while CenteredClip resists the same minority."""
+    res, _ = _quad_sweep(get_sweep_grid("no_off_smoke"))
+    assert res.n_programs == 1
+    assert len(res.results) == res.grid.n_points == 4
+    assert res.n_runs == 4 + 1                        # + 1 baseline seed
+    by = {(r.regime, r.n_attackers): r for r in res.results}
+    assert by[("mean", 2)].derailed                   # 2/8 kills mean
+    assert not by[("centered_clip", 2)].derailed      # CC holds at 25%
+    assert by[("centered_clip", 6)].derailed          # 6/12 = breakdown
+    assert all(np.isfinite(r.baseline_loss) for r in res.results)
+    table = res.phase_table()
+    assert "mean" in table and "centered_clip" in table
+
+
+def test_sweep_lane_equals_simulate_derailment():
+    """Any sweep cell must reproduce the single-point path bit-for-bit
+    (same fold_in schedule, same masked-aggregation algebra)."""
+    grid = SweepGrid(
+        name="tiny", description="", n_honest=6, attacker_counts=(1, 3),
+        seeds=(0, 2), rounds=10,
+        regimes=get_sweep_grid("no_off_smoke").regimes)
+    res, (loss_fn, params0, data_fn, eval_fn) = _quad_sweep(grid)
+    for r in res.results:
+        single = simulate_derailment(
+            loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn, eval_fn,
+            n_honest=6, n_attack=r.n_attackers, rounds=10,
+            aggregator=r.aggregator, seed=r.seed,
+            baseline_loss=r.baseline_loss)
+        np.testing.assert_allclose(r.final_loss, single.final_loss,
+                                   rtol=2e-3, err_msg=str(r))
+        assert r.derailed == single.derailed
+
+
+def test_sweep_verified_regime_slashes_attackers():
+    """p_check rides as a traced lane: verified lanes slash every attacker
+    while the unverified regime in the same program slashes none."""
+    from repro.core.scenarios import Regime
+    from repro.core.verification import VerificationConfig
+    grid = SweepGrid(
+        name="v", description="", n_honest=6, attacker_counts=(2,),
+        seeds=(0,), rounds=10, attack="zero",
+        regimes=(Regime("mean", "mean"),
+                 Regime("mean+verified", "mean",
+                        verification=VerificationConfig(
+                            p_check=1.0, stake=5.0, tolerance=1e-3))))
+    res, _ = _quad_sweep(grid)
+    assert res.n_programs == 1
+    by = {r.regime: r for r in res.results}
+    assert by["mean+verified"].attackers_slashed == 2
+    assert not by["mean+verified"].derailed
+    assert by["mean"].attackers_slashed == 0
+
+
+def test_sweep_fast_compile_matches_default():
+    grid = get_sweep_grid("no_off_smoke")
+    fast, _ = _quad_sweep(grid, fast_compile=True)
+    full, _ = _quad_sweep(grid, fast_compile=False)
+    np.testing.assert_allclose(
+        [r.final_loss for r in fast.results],
+        [r.final_loss for r in full.results], rtol=1e-6)
+
+
+def test_sweep_grid_registry():
+    assert {"no_off_quick", "no_off_phase", "no_off_smoke"} <= \
+        set(list_sweep_grids())
+    assert get_sweep_grid("no_off_quick").n_points == 24
+    with pytest.raises(KeyError, match="registered"):
+        get_sweep_grid("nope")
+
+
+# ---------------- traced aggregator kwargs / multi-aggregator ------------------
+def test_masked_aggregators_accept_traced_kwargs():
+    """One compiled program sweeps krum's f / trimmed_mean's trim /
+    centered_clip's clip_tau as traced per-run values."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(10, 7)).astype(np.float32))
+    mask = jnp.asarray(rng.random(10) < 0.8).at[0].set(True)
+
+    for name, kw_name, values in [
+        ("krum", "f", jnp.asarray([1, 2, 3])),
+        ("multi_krum", "m", jnp.asarray([2, 3, 4])),
+        ("trimmed_mean", "trim", jnp.asarray([1, 2, 3])),
+        ("centered_clip", "clip_tau", jnp.asarray([0.5, 1.0, 2.0])),
+    ]:
+        fn = aggregation.get_masked_aggregator(name)
+        batched = jax.jit(jax.vmap(lambda v: fn(x, mask, **{kw_name: v})))(values)
+        for i, v in enumerate(np.asarray(values)):
+            one = fn(x, mask, **{kw_name: v.item()})
+            np.testing.assert_allclose(np.asarray(batched[i]),
+                                       np.asarray(one), rtol=1e-5, atol=1e-6,
+                                       err_msg=f"{name}({kw_name}={v})")
+
+
+def test_multi_aggregator_round_selects_per_lane():
+    """A fused round evaluates the whole aggregator set and lane.agg_id
+    picks the result — each lane equals its single-aggregator campaign."""
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    nodes = [NodeSpec(f"h{i}") for i in range(6)] + \
+        [NodeSpec("adv", byzantine="sign_flip", byzantine_scale=20.0)]
+    opt = SGD(lr=0.1, momentum=0.0)
+    aggs = [("mean", {}), ("centered_clip", {})]
+    lanes = []
+    for aid in (0, 1):
+        lane = lane_for_nodes(nodes, SwarmConfig(seed=0))
+        lanes.append(lane._replace(agg_id=jnp.asarray(aid, jnp.int32)))
+    _, recs, _ = run_campaign(loss_fn, params0, opt, data_fn,
+                              stack_lanes(lanes), rounds=10, aggregator=aggs)
+    for aid, name in [(0, "mean"), (1, "centered_clip")]:
+        _, recs1, _ = run_campaign(
+            loss_fn, params0, opt, data_fn,
+            stack_lanes([lane_for_nodes(nodes, SwarmConfig(seed=0))]),
+            rounds=10, aggregator=name)
+        np.testing.assert_allclose(np.asarray(recs.agg_norm[aid]),
+                                   np.asarray(recs1.agg_norm[0]),
+                                   rtol=1e-5, err_msg=name)
+
+
+def test_routed_static_kwargs_beat_traced_lane_kwargs():
+    """Regression: in a fused round, a regime pinned to a static krum f must
+    not pick up the per-lane traced f meant for the auto-f krum regime
+    (call-time kwargs would silently win over the partial-baked ones)."""
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    nodes = [NodeSpec(f"h{i}") for i in range(5)] + \
+        [NodeSpec("adv", byzantine="sign_flip", byzantine_scale=30.0)]
+    opt = SGD(lr=0.1, momentum=0.0)
+    lane = lane_for_nodes(nodes, SwarmConfig(seed=0),
+                          agg_kwargs={"f": 3})      # traced f for auto-krum
+    aggs = [("krum", {"f": 1}), ("krum", {})]       # pinned f=1 | auto f
+    _, recs, _ = run_campaign(
+        loss_fn, params0, opt, data_fn,
+        stack_lanes([lane._replace(agg_id=jnp.asarray(0, jnp.int32)),
+                     lane._replace(agg_id=jnp.asarray(1, jnp.int32))]),
+        rounds=8, aggregator=aggs)
+    for aid, static_kw in [(0, {"f": 1}), (1, {"f": 3})]:
+        _, recs1, _ = run_campaign(
+            loss_fn, params0, opt, data_fn,
+            stack_lanes([lane_for_nodes(nodes, SwarmConfig(seed=0))]),
+            rounds=8, aggregator="krum", agg_kwargs=static_kw)
+        np.testing.assert_allclose(np.asarray(recs.agg_norm[aid]),
+                                   np.asarray(recs1.agg_norm[0]),
+                                   rtol=1e-5, err_msg=f"agg_id={aid}")
+
+
+def test_run_campaign_rejects_agg_kwargs_with_aggregator_set():
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    lanes = stack_lanes([lane_for_nodes([NodeSpec("h0"), NodeSpec("h1")],
+                                        SwarmConfig(seed=0))])
+    with pytest.raises(ValueError, match="static kwargs"):
+        run_campaign(loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn,
+                     lanes, rounds=2, aggregator=[("mean", {}), ("krum", {})],
+                     agg_kwargs={"f": 1})

@@ -134,6 +134,47 @@ def test_powersgd_low_rank_exact_on_low_rank_input():
                                atol=1e-3)
 
 
+def test_powersgd_rejects_zero_iters():
+    """Regression: iters=0 used to escape the projection loop with the left
+    factor unbound (UnboundLocalError) — now a clear ValueError."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+    with pytest.raises(ValueError, match="iters >= 1"):
+        compression.powersgd_compress(jax.random.PRNGKey(1), x, iters=0)
+
+
+def test_roundtrip_carries_powersgd_matrices():
+    """Regression: roundtrip rejected 'powersgd' even though it sits in
+    DECOMPRESSORS.  2-D payloads go through natively."""
+    u = jax.random.normal(jax.random.PRNGKey(0), (32, 2))
+    v = jax.random.normal(jax.random.PRNGKey(1), (16, 2))
+    x = u @ v.T
+    y = compression.roundtrip("powersgd", jax.random.PRNGKey(2), x,
+                              rank=2, iters=2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_roundtrip_powersgd_reshapes_flat_payloads():
+    """The swarm's wire carries flat gradients: they are padded onto the
+    squarest 2-D grid, compressed, and sliced back — exact when the grid
+    view is low-rank, shape-preserving and finite always."""
+    base = jnp.outer(jnp.arange(1.0, 12.0), jnp.arange(1.0, 12.0))   # rank 1
+    flat = base.reshape(-1)[:119]                  # 119 pads onto 11x11
+    y = compression.roundtrip("powersgd", jax.random.PRNGKey(0), flat,
+                              rank=2, iters=2)
+    assert y.shape == flat.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(flat), rtol=1e-3,
+                               atol=1e-3)
+    z = compression.roundtrip("powersgd", jax.random.PRNGKey(0),
+                              jax.random.normal(jax.random.PRNGKey(1), (37,)))
+    assert z.shape == (37,) and bool(jnp.isfinite(z).all())
+
+
+def test_roundtrip_unknown_codec_names_the_carried_ones():
+    with pytest.raises(ValueError, match="powersgd"):
+        compression.roundtrip("gzip", jax.random.PRNGKey(0), jnp.ones((4,)))
+
+
 # ================================= gossip ======================================
 
 
@@ -204,6 +245,34 @@ def test_audit_tolerance_absorbs_nondeterminism():
     ok, _ = verification.audit(_fake_grads(), lambda: _fake_grads(), cfg,
                                jax.random.PRNGKey(2))
     assert ok
+
+
+def test_audit_noise_keys_fold_in_per_leaf():
+    """Regression: one PRNG key across every leaf drew the *same* noise
+    pattern on same-shaped leaves (correlated 'nondeterminism') — each leaf
+    must get an independent fold_in key."""
+    cfg = verification.VerificationConfig(numeric_noise=1e-3)
+    x = jax.random.normal(jax.random.PRNGKey(0), (16,))
+    tree = {"a": x, "b": x}                        # identical leaves
+    noisy = verification._perturbed(tree, jax.random.PRNGKey(1), cfg)
+    na, nb = noisy["a"] - x, noisy["b"] - x
+    assert float(jnp.max(jnp.abs(na))) > 0.0
+    assert float(jnp.max(jnp.abs(na - nb))) > 1e-7  # decorrelated draws
+
+
+def test_audit_matches_audit_flat_on_flattened_tree():
+    """audit on a single-leaf (flattened) tree is the same noise-and-compare
+    formula as audit_flat given that leaf's fold_in key — the two engines'
+    pass/slash decisions agree at the tolerance boundary."""
+    cfg = verification.VerificationConfig(tolerance=1e-3, numeric_noise=1e-4)
+    key = jax.random.PRNGKey(7)
+    flat = jax.random.normal(jax.random.PRNGKey(0), (64,))
+    claimed = flat + 1e-4 * jax.random.normal(jax.random.PRNGKey(1), (64,))
+    ok_tree, mm_tree = verification.audit([claimed], lambda: [flat], cfg, key)
+    ok_flat, mm_flat = verification.audit_flat(
+        claimed, flat, jax.random.fold_in(key, 0), cfg)
+    assert ok_tree == bool(ok_flat)
+    np.testing.assert_allclose(float(mm_tree), float(mm_flat), rtol=1e-6)
 
 
 def test_cheating_economics():

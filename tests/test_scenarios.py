@@ -169,18 +169,46 @@ def test_active_mask_tracks_join_leave():
 
 def test_batched_round_compiles_once_despite_churn():
     """The fixed-shape claim: join/leave/slash only flips mask bits — the
-    jitted round must not retrace."""
+    jitted per-round path must not retrace."""
     loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
     nodes = [NodeSpec(f"c{i}") for i in range(3)] + \
         [NodeSpec(f"w{i}", join_round=2 + i, leave_round=6 + 2 * i)
          for i in range(5)]
     swarm = make_swarm(loss_fn, params0, SGD(lr=0.1, momentum=0.0), nodes,
                        SwarmConfig(aggregator="centered_clip"), data_fn)
-    swarm.run(20)
+    for r in range(20):
+        swarm.step(r)
     if not hasattr(swarm._round_fn, "_cache_size"):
         pytest.skip("this jax exposes no jit cache-size introspection — "
                     "the no-recompile claim is unverifiable here")
     assert swarm._round_fn._cache_size() == 1
+
+
+def test_scanned_run_is_one_program_and_matches_step_loop():
+    """run() with no eval_fn dispatches the scanned core: one compiled
+    program for the whole run, identical history/ledger to the step loop."""
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    nodes = [NodeSpec(f"h{i}") for i in range(5)] + [
+        NodeSpec("adv", byzantine="sign_flip", byzantine_scale=20.0),
+        NodeSpec("late", join_round=4),
+    ]
+    cfg = SwarmConfig(aggregator="centered_clip")
+    mk = lambda: make_swarm(loss_fn, params0, SGD(lr=0.1, momentum=0.0),
+                            nodes, cfg, data_fn)
+    scanned, stepped = mk(), mk()
+    scanned.run(15)
+    for r in range(15):
+        stepped.step(r)
+    assert [r["n_active"] for r in scanned.history] == \
+        [r["n_active"] for r in stepped.history]
+    np.testing.assert_allclose(
+        [r["agg_norm"] for r in scanned.history],
+        [r["agg_norm"] for r in stepped.history], rtol=1e-5, atol=1e-7)
+    assert scanned.ledger.balances == pytest.approx(stepped.ledger.balances)
+    if hasattr(scanned._round_fn, "_cache_size"):
+        assert scanned._round_fn._cache_size() == 0     # never used per-round
+        (scan_fn,) = scanned._scan_cache.values()
+        assert scan_fn._cache_size() == 1
 
 
 def test_make_swarm_rejects_batched_data_fn_on_sequential():

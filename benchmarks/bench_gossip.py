@@ -1,27 +1,56 @@
 """Paper §3.2: gossip replaces the synchronous all-reduce — convergence to
 the exact mean is geometric in the spectral gap; per-round traffic is
-O(degree), not O(N)."""
+O(degree), not O(N).
+
+Two layers:
+
+1. raw gossip mixing (``gossip.gossip_average``) across the registered
+   topologies — gap, analytic round count, error contraction, bytes/round;
+2. the **full decentralized swarm round** — a topology-axis derailment
+   sweep (``no_off_topology`` grid) through ``derailment.sweep``: per-node
+   replicas, neighborhood robust aggregation, gossip mixing, all
+   (topology × fraction × seed) lanes in ONE compiled program, reported as
+   runs/s next to ``bench_derailment``'s centralized numbers.
+
+CLI:  ``python benchmarks/bench_gossip.py [--tiny] [--json F]``
+``--tiny`` runs the 4-point ``no_off_topology_smoke`` grid and skips the
+large raw-mixing sizes (the CI smoke job); ``--json`` dumps rows + sweep
+metadata.
+"""
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import Row, timeit
-from repro.core import gossip
+from repro.core import gossip, topology
+
+#: filled by run() for the --json artifact
+LAST_SWEEP_META: dict = {}
 
 
-def run() -> list:
+def _mixing_rows(tiny: bool) -> list:
     rows: list[Row] = []
-    d = 4096
-    for n, topo_name, adj in [
-        (16, "ring", gossip.ring_adjacency(16)),
-        (64, "ring", gossip.ring_adjacency(64)),
-        (64, "reg6", gossip.random_regular_adjacency(64, 6)),
-        (256, "reg8", gossip.random_regular_adjacency(256, 8)),
-    ]:
-        w = gossip.metropolis_weights(adj)
-        gap = gossip.spectral_gap(w)
+    d = 512 if tiny else 4096
+    cases = [
+        (16, "ring"),
+        (16, "clustered"),
+        (16, "torus"),
+    ] if tiny else [
+        (16, "ring"),
+        (64, "ring"),
+        (64, "torus"),
+        (64, "clustered"),
+        (64, "random_regular"),
+        (256, "random_regular"),
+    ]
+    for n, topo_name in cases:
+        adj = topology.get_topology(topo_name).builder(n, seed=0)
+        w = topology.metropolis_weights(adj)
+        gap = topology.spectral_gap(w)
         rounds = gossip.rounds_for_tolerance(w, 1e-3)
         x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
         wj = jnp.asarray(w)
@@ -39,6 +68,66 @@ def run() -> list:
     return rows
 
 
+def _decentralized_rows(grid_name: str) -> list:
+    """The decentralized swarm round end-to-end: one topology-axis sweep."""
+    from benchmarks.bench_byzantine import _problem
+    from repro.core.derailment import sweep
+    from repro.core.scenarios import get_sweep_grid
+    from repro.optim.optimizer import SGD
+
+    rows: list[Row] = []
+    loss_fn, params0, data_fn = _problem()
+    eval_fn = lambda p: loss_fn(p, data_fn(0, 10_000))
+    grid = get_sweep_grid(grid_name)
+    res = sweep(loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn,
+                eval_fn, grid)
+
+    n_total = grid.n_honest + max(grid.attacker_counts)
+    for reg in grid.regimes:
+        for topo in grid.topologies:
+            gap = topology.spectral_gap(topology.mixing_matrix(topo, n_total))
+            cell = [r for r in res.results
+                    if r.topology == topo and r.regime == reg.name]
+            der = sum(r.derailed for r in cell)
+            slashed = sum(r.attackers_slashed for r in cell)
+            rows.append((
+                f"gossip.decentralized.{reg.name}@{topo}", 0.0,
+                f"gap={gap:.4f} derailed={der}/{len(cell)} "
+                f"slashed={slashed} (neighborhood {reg.aggregator})"))
+    rows.append((
+        "gossip.decentralized.runs_per_s", 1e6 / res.runs_per_s,
+        f"{res.runs_per_s:.1f} runs/s ({res.n_runs} decentralized runs incl "
+        f"per-topology baselines, {len(res.results)} grid points, "
+        f"{res.n_programs} program, {res.wall_s:.2f}s end-to-end)"))
+    LAST_SWEEP_META.update(
+        grid=grid_name, n_points=len(res.results), n_runs=res.n_runs,
+        n_programs=res.n_programs, sweep_wall_s=res.wall_s,
+        sweep_runs_per_s=res.runs_per_s,
+        topologies=list(grid.topologies))
+    return rows
+
+
+def run(tiny: bool = False) -> list:
+    rows = _mixing_rows(tiny)
+    rows += _decentralized_rows("no_off_topology_smoke" if tiny
+                                else "no_off_topology")
+    return rows
+
+
 if __name__ == "__main__":
     from benchmarks.common import emit
-    emit(run())
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small mixing sizes + the smoke sweep grid")
+    ap.add_argument("--json", default=None, metavar="FILE",
+                    help="dump rows + sweep metadata as JSON")
+    args = ap.parse_args()
+
+    rows = run(tiny=args.tiny)
+    emit(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": [{"name": n, "us_per_call": us, "derived": d}
+                                for n, us, d in rows],
+                       "sweep": LAST_SWEEP_META}, f, indent=2)

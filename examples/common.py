@@ -1,0 +1,43 @@
+"""Shared example plumbing: the reduced benchmark LM that the phase-diagram
+examples sweep.  One definition keeps `derailment_no_off.py` and
+`topology_no_off.py` numbers comparable — tweak the model here and both
+diagrams move together."""
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, data_fn_for_swarm, model_batch
+from repro.models.model import build_model
+from repro.optim.optimizer import SGD
+
+
+def tiny_quadratic_problem(n_params: int = 16):
+    """(loss_fn, params, data_fn, eval_fn, optimizer) for the convex toy
+    problem — the --tiny fast path of the phase-diagram examples."""
+    import jax.numpy as jnp
+    key = jax.random.PRNGKey(42)
+    k1, k2 = jax.random.split(key)
+    target = jax.random.normal(k1, (n_params,))
+    loss_fn = lambda p, b: jnp.mean(jnp.square(b["x"] @ (p["w"] - target)))
+
+    def data_fn(node_idx, rnd):
+        k = jax.random.fold_in(jax.random.fold_in(k2, rnd), node_idx)
+        return {"x": jax.random.normal(k, (16, n_params))}
+
+    params = {"w": jnp.zeros((n_params,))}
+    eval_fn = lambda p: loss_fn(p, data_fn(0, 10_000))
+    return loss_fn, params, data_fn, eval_fn, SGD(lr=0.1, momentum=0.0)
+
+
+def small_lm_problem():
+    """(loss_fn, params, data_fn, eval_fn, optimizer) for a small LM that
+    sweeps a whole phase diagram in minutes on a 2-core CPU box."""
+    cfg = get_config("protocol-125m").reduced(
+        num_layers=2, d_model=64, num_heads=4, head_dim=16, d_ff=256,
+        vocab_size=256)
+    model = build_model(cfg)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=32)
+    params = model.init(jax.random.PRNGKey(0))
+    loss_fn = lambda p, b: model.loss(p, b)[0]
+    data_fn = data_fn_for_swarm(cfg, dcfg, 32)
+    eval_fn = lambda p: loss_fn(p, model_batch(cfg, dcfg, 10**6))
+    return loss_fn, params, data_fn, eval_fn, SGD(lr=0.5, momentum=0.9)

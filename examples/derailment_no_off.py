@@ -11,15 +11,11 @@ qualitative table with numbers attached, plus the attack's price tag.
 """
 import argparse
 
-import jax
+from common import small_lm_problem
 
-from repro.configs import get_config
 from repro.core.derailment import attack_cost, no_off_report, sweep
 from repro.core.scenarios import Regime, SweepGrid
 from repro.core.verification import VerificationConfig
-from repro.data.pipeline import DataConfig, data_fn_for_swarm, model_batch
-from repro.models.model import build_model
-from repro.optim.optimizer import SGD
 
 
 def main():
@@ -31,18 +27,8 @@ def main():
 
     # small enough that the whole phase diagram (counts x regimes lanes,
     # each lane an 18-node swarm) sweeps in minutes on a 2-core CPU box
-    cfg = get_config("protocol-125m").reduced(
-        num_layers=2, d_model=64, num_heads=4, head_dim=16, d_ff=256,
-        vocab_size=256)
-    model = build_model(cfg)
+    loss_fn, params, data_fn, eval_fn, opt = small_lm_problem()
     n_honest = 8
-    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
-                      global_batch=32)
-    params = model.init(jax.random.PRNGKey(0))
-    loss_fn = lambda p, b: model.loss(p, b)[0]
-    data_fn = data_fn_for_swarm(cfg, dcfg, 32)
-    eval_fn = lambda p: loss_fn(p, model_batch(cfg, dcfg, 10**6))
-    opt = SGD(lr=0.5, momentum=0.9)
 
     vcfg = VerificationConfig(p_check=0.5, stake=10.0, tolerance=1e-3)
     grid = SweepGrid(

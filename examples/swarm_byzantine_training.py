@@ -106,7 +106,7 @@ def main():
     for r in range(args.rounds):
         rec = swarm.step(r)
         if r % 20 == 0 or r == args.rounds - 1:
-            loss = float(eval_fn(swarm.params))
+            loss = float(eval_fn(swarm.eval_params()))
             print(f"{r:6d} {rec['n_active']:6d} {rec['n_byzantine']:4d} "
                   f"{loss:8.4f}  {sorted(swarm.slashed)}")
 
@@ -128,12 +128,14 @@ def main():
     holders = [n.node_id for n in nodes if n.node_id not in swarm.slashed]
     custody = ShardCustody.assign(holders, num_shards=16, redundancy=2,
                                   max_fraction=0.4)
-    ckpt.save_custody(args.ckpt, swarm.params, custody)
+    # decentralized scenarios checkpoint the consensus replica
+    ckpt.save_custody(args.ckpt, swarm.eval_params(), custody)
     print(f"\ncustody checkpoint -> {args.ckpt}")
     print(f"  min extraction coalition: {custody.min_extraction_coalition()} "
           f"of {len(holders)} nodes")
     try:
-        ckpt.restore_custody(args.ckpt, swarm.params, holders=holders[:2])
+        ckpt.restore_custody(args.ckpt, swarm.eval_params(),
+                             holders=holders[:2])
         raise RuntimeError("partial coalition restored — bug!")
     except PermissionError as e:
         print(f"  partial-coalition restore correctly refused: {e}")

@@ -2,7 +2,9 @@
 
 - aggregation    : byzantine-robust aggregators (§3.3)
 - compression    : QSGD / top-k / PowerSGD wire compression (§3.1)
-- gossip         : gossip averaging + topologies (§3.2)
+- gossip         : gossip averaging runtime (§3.2)
+- topology       : communication graphs, mixing matrices, spectral gaps —
+                   the decentralized round's graph layer (§3.2, §5.5)
 - swarm          : elastic, heterogeneous, byzantine swarm trainer (§3);
                    batched jit engine + sequential reference oracle
 - scenarios      : named scenario registry (byzantine mixes, churn, wire
@@ -25,6 +27,7 @@ from repro.core import (  # noqa: F401
     protocol,
     scenarios,
     swarm,
+    topology,
     unextractable,
     verification,
 )

@@ -13,7 +13,9 @@ Implemented (each cited in the paper):
   ``repro.kernels.centered_clip``.
 
 Breakdown points (validated in tests / benchmarks):
-  mean: 0; krum: (N-2)/2N needs N ≥ 2f+3; median/trimmed: 1/2; CC: ~1/2 (bounded error).
+  mean: 0; krum: (N-3)/2N (from N ≥ 2f+3, i.e. f ≤ (N-3)/2 — pinned against
+  masked_krum at the boundary in tests); median/trimmed: 1/2; CC: ~1/2
+  (bounded error).
 
 Every aggregator also has a ``masked_*`` twin taking a fixed (N, D) stack
 plus a boolean keep-mask — the form the batched swarm engine needs so the

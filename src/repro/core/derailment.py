@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import topology
 from repro.core.scenarios import Regime, SweepGrid
 from repro.core.swarm import (
     BEHAVIOUR_CODES,
@@ -59,6 +60,7 @@ class DerailmentResult:
     init_loss: Optional[float] = None
     seed: int = 0
     regime: str = ""
+    topology: str = ""      # "" = centralized; else a core.topology name
 
     @property
     def derailed(self) -> bool:
@@ -88,26 +90,39 @@ def simulate_derailment(loss_fn, init_params, optimizer, data_fn, eval_fn, *,
                         verification: Optional[VerificationConfig] = None,
                         attack: str = "inner_product", scale: float = 50.0,
                         baseline_loss: Optional[float] = None,
+                        topology: Optional[str] = None,
                         seed: int = 0, engine: str = "batched") -> DerailmentResult:
     """Measure a single derailment point.
 
     Pass ``baseline_loss`` when sweeping many points against one honest
     baseline — otherwise *each call* re-trains the honest swarm from
-    scratch.  For whole phase diagrams use :func:`sweep`, which shares the
-    baseline and compiles every point of every regime into one program.
+    scratch.  ``topology`` (a ``core.topology`` name) runs the point in the
+    decentralized round — the baseline is then trained on the *same*
+    topology so the result isolates the attack, not the graph.  For whole
+    phase diagrams use :func:`sweep`, which shares the baseline and
+    compiles every point of every regime into one program.
     """
     init_loss = float(eval_fn(init_params))
     nodes = make_swarm_nodes(n_honest, n_attack, attack, scale)
     cfg = SwarmConfig(aggregator=aggregator, verification=verification, seed=seed,
+                      topology=topology,
                       agg_kwargs={"f": max(1, n_attack)} if "krum" in aggregator else {})
     swarm = make_swarm(loss_fn, init_params, optimizer, nodes, cfg, data_fn,
                        engine=engine)
     losses = swarm.run(rounds, eval_fn=eval_fn, eval_every=max(1, rounds // 5))
 
     if baseline_loss is None:
-        base = make_swarm(loss_fn, init_params, optimizer,
-                          [NodeSpec(f"h{i}") for i in range(n_honest)],
-                          SwarmConfig(aggregator="mean", seed=seed), data_fn,
+        base_nodes = [NodeSpec(f"h{i}") for i in range(n_honest)]
+        if topology is not None:
+            # keep the mixing graph the SAME SIZE as the attacked swarm's:
+            # attacker slots ride as never-joining relays, so the ratio
+            # isolates the attack rather than a smaller (different-gap)
+            # graph — exactly how sweep()'s count=0 baseline lanes work
+            base_nodes += [NodeSpec(f"adv{i}", join_round=_FAR)
+                           for i in range(n_attack)]
+        base = make_swarm(loss_fn, init_params, optimizer, base_nodes,
+                          SwarmConfig(aggregator="mean", seed=seed,
+                                      topology=topology), data_fn,
                           engine=engine)
         baseline_loss = base.run(rounds, eval_fn=eval_fn, eval_every=rounds)[-1]
 
@@ -122,6 +137,7 @@ def simulate_derailment(loss_fn, init_params, optimizer, data_fn, eval_fn, *,
         init_loss=init_loss,
         seed=seed,
         regime=aggregator + ("+verified" if verification else ""),
+        topology=topology or "",
     )
 
 
@@ -142,17 +158,27 @@ class SweepResult:
         return self.n_runs / max(self.wall_s, 1e-9)
 
     def phase_table(self) -> str:
-        """The §5.5 phase diagram: derailed-seed counts per (regime,
-        attacker fraction) cell, attackers-slashed appended when any."""
+        """The §5.5 phase diagram: derailed-seed counts per (regime [,
+        topology], attacker fraction) cell, attackers-slashed appended when
+        any.  Topology-axis sweeps get one row per (regime, topology),
+        labelled ``regime@topology``."""
         fracs = sorted({r.attacker_fraction for r in self.results})
-        head = "regime".ljust(22) + "".join(f"frac={f:.2f}".rjust(12)
-                                            for f in fracs)
-        lines = [head]
+        rows: List[Tuple[str, str]] = []          # (regime, topology)
         for reg in self.grid.regimes:
+            for topo in (self.grid.topologies or ("",)):
+                if any(r.regime == reg.name and r.topology == topo
+                       for r in self.results):
+                    rows.append((reg.name, topo))
+        labels = [reg + (f"@{topo}" if topo else "") for reg, topo in rows]
+        width = max([22] + [len(l) + 2 for l in labels])
+        head = "regime".ljust(width) + "".join(f"frac={f:.2f}".rjust(12)
+                                               for f in fracs)
+        lines = [head]
+        for (reg, topo), label in zip(rows, labels):
             cells = []
             for f in fracs:
                 cell = [r for r in self.results
-                        if r.regime == reg.name
+                        if r.regime == reg and r.topology == topo
                         and abs(r.attacker_fraction - f) < 1e-9]
                 if not cell:
                     cells.append("-".rjust(12))
@@ -163,7 +189,7 @@ class SweepResult:
                 if slashed:
                     txt += f" s{slashed}"
                 cells.append(txt.rjust(12))
-            lines.append(reg.name.ljust(22) + "".join(cells))
+            lines.append(label.ljust(width) + "".join(cells))
         return "\n".join(lines)
 
 
@@ -175,13 +201,22 @@ def _seed_key(seed: int):
 def _sweep_lane(n_total: int, n_honest: int, count: int, code: int,
                 scale: float, seed: int,
                 v: Optional[VerificationConfig],
-                agg_id: int, agg_kwargs: Dict) -> LaneParams:
+                agg_id: int, agg_kwargs: Dict,
+                mixing: Optional[np.ndarray] = None) -> LaneParams:
     """One run lane: honest nodes first, ``count`` attackers, then padding
     that never joins (all regimes share a fixed N so they vmap together).
     Node indices — and therefore the fold_in key schedule — match the
     single-run ``Swarm`` built by ``simulate_derailment`` exactly.  Leaves
     are host (numpy) arrays — a sweep builds hundreds of lanes and
-    ``stack_lanes`` moves each stacked field to device once."""
+    ``stack_lanes`` moves each stacked field to device once.  ``mixing``
+    (decentralized sweeps) is this lane's topology matrix over ALL
+    ``n_total`` slots; padding slots then sit in the graph as silent
+    relays — they mix and update but never contribute (their keep bit
+    stays off).  That holds the graph fixed across attacker counts (the
+    axis stays interpretable), which means decentralized cells equal their
+    ``simulate_derailment(topology=...)`` twin — whose graph spans its own
+    roster — only at ``count == max(attacker_counts)``, where the sizes
+    coincide (pinned in tests/test_topology.py)."""
     codes = np.zeros(n_total, np.int32)
     codes[n_honest:n_honest + count] = code
     scales = np.full(n_total, 10.0, np.float32)     # NodeSpec default
@@ -200,6 +235,7 @@ def _sweep_lane(n_total: int, n_honest: int, count: int, code: int,
         numeric_noise=np.float32(v.numeric_noise if v else 0.0),
         agg_id=np.int32(agg_id),
         agg_kwargs={k: np.asarray(x) for k, x in agg_kwargs.items()},
+        mixing=mixing,
     )
 
 
@@ -208,13 +244,17 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
           fast_compile: Optional[bool] = None) -> SweepResult:
     """Measure a whole §5.5 phase diagram as **one** compiled device program.
 
-    Every (regime × attacker count × scale × seed) cell is a lane of a
-    single campaign: verification differences ride in the traced
+    Every (regime × topology × attacker count × scale × seed) cell is a
+    lane of a single campaign: verification differences ride in the traced
     ``p_check``/``tolerance`` lanes (``p_check=0`` disables audits),
     aggregator differences in the ``agg_id`` lane of a multi-aggregator
     round (the gradient / corruption / audit machinery — the bulk of the
-    compile cost — is shared), and the honest baseline rides along as extra
-    ``count=0`` lanes, computed once per seed instead of once per point.
+    compile cost — is shared), topology differences in the traced
+    ``mixing`` lane of the decentralized round (``grid.topologies``
+    non-empty — every lane then runs per-node replicas + neighborhood
+    aggregation + gossip mixing), and the honest baseline rides along as
+    extra ``count=0`` lanes, computed once per (topology, seed) instead of
+    once per point.
 
     ``fast_compile=None`` decides automatically: tiny models (≤ 4096
     params) are compile-bound, so they get XLA's fast/low-optimization
@@ -255,20 +295,31 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
     def traced_kw(count):
         return {"f": max(1, count)} if need_f else {}
 
+    # the decentralized axis: one Metropolis matrix per named topology over
+    # all n_total slots (padding slots are silent relays — see _sweep_lane);
+    # topology is a *traced lane*, so the whole axis shares one program
+    topos = grid.topologies or ("",)
+    mixings = {t: (topology.mixing_matrix(t, n_total, seed=0)
+                   .astype(np.float32) if t else None) for t in topos}
+
     lanes, metas = [], []
     for reg in grid.regimes:
         aid = agg_index[(reg.aggregator, tuple(sorted(reg.agg_kwargs.items())))]
-        for count in grid.attacker_counts:
-            for scale in grid.scales:
-                for seed in grid.seeds:
-                    lanes.append(_sweep_lane(
-                        n_total, n_honest, count, code, scale, seed,
-                        reg.verification, aid, traced_kw(count)))
-                    metas.append((reg, count, scale, seed))
-    for seed in grid.seeds:                 # baseline lanes (count = 0)
-        lanes.append(_sweep_lane(n_total, n_honest, 0, code, 0.0, seed,
-                                 None, agg_index[("mean", ())], traced_kw(0)))
-        metas.append((None, 0, 0.0, seed))
+        for topo in topos:
+            for count in grid.attacker_counts:
+                for scale in grid.scales:
+                    for seed in grid.seeds:
+                        lanes.append(_sweep_lane(
+                            n_total, n_honest, count, code, scale, seed,
+                            reg.verification, aid, traced_kw(count),
+                            mixing=mixings[topo]))
+                        metas.append((reg, topo, count, scale, seed))
+    for topo in topos:                      # baseline lanes (count = 0),
+        for seed in grid.seeds:             # shared per (topology, seed)
+            lanes.append(_sweep_lane(
+                n_total, n_honest, 0, code, 0.0, seed, None,
+                agg_index[("mean", ())], traced_kw(0), mixing=mixings[topo]))
+            metas.append((None, topo, 0, 0.0, seed))
 
     state, recs, final = run_campaign(
         loss_fn, init_params, optimizer, data_fn, stack_lanes(lanes),
@@ -281,12 +332,12 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
     final = np.asarray(final)
 
     results_raw = []
-    baselines: Dict[int, float] = {}
-    for j, (reg, count, scale, seed) in enumerate(metas):
+    baselines: Dict[Tuple[str, int], float] = {}
+    for j, (reg, topo, count, scale, seed) in enumerate(metas):
         if reg is None:
-            baselines[seed] = float(final[j])
+            baselines[(topo, seed)] = float(final[j])
         else:
-            results_raw.append((reg, count, scale, seed, float(final[j]),
+            results_raw.append((reg, topo, count, scale, seed, float(final[j]),
                                 int(slashed[j, n_honest:n_honest + count].sum())))
 
     results = [DerailmentResult(
@@ -294,13 +345,14 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
         aggregator=reg.aggregator,
         verified=reg.verification is not None,
         final_loss=final_loss,
-        baseline_loss=baselines[seed],
+        baseline_loss=baselines[(topo, seed)],
         attackers_slashed=n_slashed,
         n_attackers=count,
         init_loss=init_loss,
         seed=seed,
         regime=reg.name,
-    ) for reg, count, scale, seed, final_loss, n_slashed in results_raw]
+        topology=topo,
+    ) for reg, topo, count, scale, seed, final_loss, n_slashed in results_raw]
     return SweepResult(grid=grid, results=results, n_programs=1,
                        n_runs=len(lanes), wall_s=time.perf_counter() - t0)
 
@@ -322,11 +374,18 @@ def attack_cost(n_attackers: int, rounds: int, *, compute_cost_per_round: float,
 
 
 def no_off_report(results) -> str:
-    """Render the §5.5 analysis from a list of DerailmentResult."""
-    lines = ["attacker_frac  aggregator      verified  derailed  slashed  final/baseline"]
+    """Render the §5.5 analysis from a list of DerailmentResult (a topology
+    column appears when any result is decentralized)."""
+    topo = any(r.topology for r in results)
+    head = "attacker_frac  aggregator      "
+    head += "topology          " if topo else ""
+    head += "verified  derailed  slashed  final/baseline"
+    lines = [head]
     for r in results:
+        t = f"{r.topology or 'centralized':16s}  " if topo else ""
         lines.append(
-            f"{r.attacker_fraction:12.2f}  {r.aggregator:14s}  {str(r.verified):8s}"
+            f"{r.attacker_fraction:12.2f}  {r.aggregator:14s}  {t}"
+            f"{str(r.verified):8s}"
             f"  {str(r.derailed):8s}  {r.attackers_slashed}/{r.n_attackers:<6d}"
             f"  {r.final_loss / max(r.baseline_loss, 1e-9):6.2f}")
     return "\n".join(lines)

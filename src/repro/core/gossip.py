@@ -7,6 +7,12 @@ built from the (possibly per-round) adjacency; per-round per-node traffic is
 O(degree · D) instead of the all-reduce's ring O(D) *with global
 synchronization*.  Convergence to the exact mean is geometric with rate λ₂
 (second eigenvalue of W) — benchmarked in bench_gossip.py.
+
+The graph layer — adjacency builders, Metropolis weights, spectral-gap
+utilities, and the named-topology registry — lives in ``core.topology``
+(this module grew into it) and is re-exported here for backward
+compatibility.  This module keeps the mixing *runtime*: the gossip step,
+the scanned multi-round average, consensus metrics, and traffic accounting.
 """
 from __future__ import annotations
 
@@ -16,53 +22,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.topology import (  # noqa: F401  (compat re-exports)
+    clustered_adjacency,
+    fully_connected_adjacency,
+    metropolis_weights,
+    mixing_matrix,
+    random_regular_adjacency,
+    ring_adjacency,
+    spectral_gap,
+    torus_adjacency,
+)
+
 Array = jax.Array
-
-
-# -- topologies ---------------------------------------------------------------
-def ring_adjacency(n: int) -> np.ndarray:
-    a = np.zeros((n, n), bool)
-    idx = np.arange(n)
-    a[idx, (idx + 1) % n] = True
-    a[idx, (idx - 1) % n] = True
-    return a
-
-
-def random_regular_adjacency(n: int, degree: int, seed: int = 0) -> np.ndarray:
-    """Random degree-regular-ish graph (union of `degree/2` random ring perms)."""
-    rng = np.random.default_rng(seed)
-    a = np.zeros((n, n), bool)
-    for _ in range(max(1, degree // 2)):
-        perm = rng.permutation(n)
-        a[perm, np.roll(perm, 1)] = True
-        a[np.roll(perm, 1), perm] = True
-    np.fill_diagonal(a, False)
-    return a
-
-
-def fully_connected_adjacency(n: int) -> np.ndarray:
-    a = np.ones((n, n), bool)
-    np.fill_diagonal(a, False)
-    return a
-
-
-def metropolis_weights(adj: np.ndarray) -> np.ndarray:
-    """Doubly-stochastic mixing matrix from an undirected adjacency."""
-    adj = np.asarray(adj, bool)
-    deg = adj.sum(1)
-    n = adj.shape[0]
-    w = np.zeros((n, n))
-    for i in range(n):
-        for j in range(n):
-            if adj[i, j]:
-                w[i, j] = 1.0 / (1 + max(deg[i], deg[j]))
-    np.fill_diagonal(w, 1.0 - w.sum(1))
-    return w
-
-
-def spectral_gap(w: np.ndarray) -> float:
-    ev = np.sort(np.abs(np.linalg.eigvals(w)))[::-1]
-    return float(1.0 - ev[1])
 
 
 # -- mixing -------------------------------------------------------------------
@@ -91,11 +62,21 @@ def consensus_error(x: Array) -> Array:
 
 
 def rounds_for_tolerance(w: np.ndarray, tol: float) -> int:
-    """Analytic round count: error shrinks by (1-gap) per round."""
+    """Analytic round count to shrink consensus error by ``tol``: error
+    contracts by (1-gap) per round, so ``ceil(log tol / log(1-gap))``,
+    clamped to >= 0 (``tol >= 1`` is already satisfied by round 0 — the
+    unclamped formula used to return *negative* counts there).  A zero
+    spectral gap means the mixing graph is disconnected and gossip never
+    reaches consensus: that is now a loud ``ValueError`` instead of the old
+    silent ``10**9`` sentinel."""
+    if tol >= 1.0:
+        return 0                 # round 0 satisfies it on ANY graph
     gap = spectral_gap(w)
-    if gap <= 0:
-        return 10**9
-    return int(np.ceil(np.log(tol) / np.log(max(1e-12, 1.0 - gap))))
+    if gap <= 1e-9:
+        raise ValueError(
+            "mixing matrix has zero spectral gap (disconnected graph): "
+            "gossip never reaches consensus — no finite round count exists")
+    return max(0, int(np.ceil(np.log(tol) / np.log(max(1e-12, 1.0 - gap)))))
 
 
 def gossip_traffic_bytes(adj: np.ndarray, d: int, dtype_bytes: int = 4) -> int:

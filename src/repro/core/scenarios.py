@@ -2,8 +2,9 @@
 
 The paper's claims are claims about *regimes* — honest swarms, byzantine
 minorities, collusion, churn, heterogeneous capacity, lossy wires, audit
-economics, and derailment attacks.  Rather than every benchmark, example,
-and test hand-rolling its own ``NodeSpec`` list, this module registers ~8
+economics, derailment attacks, and (since the topology engine) fully
+decentralized gossip regimes.  Rather than every benchmark, example, and
+test hand-rolling its own ``NodeSpec`` list, this module registers ~11
 named scenarios that all of them consume, so results are comparable across
 entry points and documented in one place (``docs/scenarios.md``).
 
@@ -235,6 +236,43 @@ register_scenario(Scenario(
         seed=seed),
 ))
 
+register_scenario(Scenario(
+    name="gossip_ring_honest",
+    description=("Fully decentralized honest swarm (§3.2): per-node model "
+                 "replicas on a ring, each node mean-aggregates its "
+                 "neighborhood and replicas gossip-mix once per round.  "
+                 "Convergence and consensus_error are gated by the ring's "
+                 "O(1/n²) spectral gap — the no-central-aggregator control."),
+    make_nodes=lambda n: _mixed_nodes(n, 0, "zero", 0.0),
+    make_config=lambda seed: SwarmConfig(aggregator="mean", topology="ring",
+                                         seed=seed),
+))
+
+register_scenario(Scenario(
+    name="byzantine_neighborhood",
+    description=("Decentralized robustness (§3.3 x §3.2): a 25% sign-flip "
+                 "minority attacks a degree-4 random-regular gossip graph; "
+                 "every node CenteredClips its *own* neighborhood, so an "
+                 "attacker can exceed the breakdown point locally even "
+                 "while globally below it."),
+    make_nodes=lambda n: _mixed_nodes(n, max(1, n // 4), "sign_flip", 10.0),
+    make_config=lambda seed: SwarmConfig(aggregator="centered_clip",
+                                         topology="random_regular",
+                                         seed=seed),
+))
+
+register_scenario(Scenario(
+    name="partitioned_swarm",
+    description=("Near-partition stress (§5.5): two ring clusters joined "
+                 "by a single bridge edge (near-zero spectral gap).  "
+                 "Honest swarm; consensus leaks across the bridge one edge "
+                 "per round, so consensus_error decays at the bridge rate, "
+                 "not the cluster rate."),
+    make_nodes=lambda n: _mixed_nodes(n, 0, "zero", 0.0),
+    make_config=lambda seed: SwarmConfig(aggregator="mean",
+                                         topology="clustered", seed=seed),
+))
+
 
 # -- campaigns over scenarios ----------------------------------------------------
 def scenario_campaign(name: str, loss_fn, params, optimizer, data_fn, *,
@@ -281,7 +319,14 @@ class Regime:
 class SweepGrid:
     """A named derailment sweep: the cartesian grid (attacker counts ×
     scales × seeds) per regime that ``derailment.sweep`` compiles into one
-    device program per distinct (aggregator, static kwargs) group."""
+    device program per distinct (aggregator, static kwargs) group.
+
+    A non-empty ``topologies`` adds the **decentralized axis**: every cell
+    is additionally crossed with each named ``core.topology`` entry, runs
+    in the decentralized round (per-node replicas, neighborhood
+    aggregation, gossip mixing — the mixing matrix rides as a traced lane),
+    and honest baselines are shared per (topology, seed).  Empty = the
+    centralized round, exactly as before."""
     name: str
     description: str
     regimes: Tuple[Regime, ...]
@@ -291,11 +336,13 @@ class SweepGrid:
     scales: Tuple[float, ...] = (50.0,)
     attack: str = "inner_product"
     rounds: int = 25
+    topologies: Tuple[str, ...] = ()
 
     @property
     def n_points(self) -> int:
         return (len(self.regimes) * len(self.attacker_counts)
-                * len(self.scales) * len(self.seeds))
+                * len(self.scales) * len(self.seeds)
+                * max(1, len(self.topologies)))
 
 
 SWEEP_GRIDS: Dict[str, SweepGrid] = {}
@@ -350,6 +397,34 @@ register_sweep_grid(SweepGrid(
     description="CI smoke: 2 counts x 1 seed x 2 regimes = 4 tiny runs.",
     regimes=(Regime("mean", "mean"),
              Regime("centered_clip", "centered_clip")),
+    n_honest=6,
+    attacker_counts=(2, 6),
+    seeds=(0,),
+    rounds=8,
+))
+
+register_sweep_grid(SweepGrid(
+    name="no_off_topology",
+    description=("The decentralized §5.5 diagram: at what spectral gap "
+                 "does local robust aggregation stop resisting "
+                 "derailment?  2 regimes x 4 topologies x 3 fractions x "
+                 "2 seeds, all lanes (and per-topology baselines) in one "
+                 "compiled program — the mixing matrix is a traced lane."),
+    regimes=(Regime("mean", "mean"),
+             Regime("centered_clip", "centered_clip")),
+    topologies=("ring", "random_regular", "clustered", "fully_connected"),
+    n_honest=10,
+    attacker_counts=(1, 3, 6),
+    seeds=(0, 1),
+    rounds=20,
+))
+
+register_sweep_grid(SweepGrid(
+    name="no_off_topology_smoke",
+    description=("CI smoke for the decentralized axis: 1 regime x 2 "
+                 "topologies x 2 counts x 1 seed = 4 tiny runs."),
+    regimes=(Regime("centered_clip", "centered_clip"),),
+    topologies=("ring", "fully_connected"),
     n_honest=6,
     attacker_counts=(2, 6),
     seeds=(0,),

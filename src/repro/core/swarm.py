@@ -46,6 +46,23 @@ Both engines draw every random number from the same per-(purpose, round,
 node) ``fold_in`` schedule, so with the same seed they produce the *same*
 corruption noise, wire-codec realizations, audit selections, and therefore
 the same ``agg_norm`` history (within fp32 reduction-order tolerance).
+
+**Decentralized mode** (paper §3.2 meets §5.5): when a round is built with
+``decentralized=True`` (``SwarmConfig.topology`` on the engine,
+``LaneParams.mixing`` on the functional core), there is *no central
+aggregator*.  ``SwarmState.params`` carries a leading node axis — one model
+replica per node — and each round every node (1) computes its gradient at
+its **own** replica, (2) robust-aggregates the submitted gradients of its
+*neighborhood* (the rows of the mixing matrix, via the same masked
+aggregators with a per-node neighbor ∧ keep mask), (3) applies the result
+to its replica with its own optimizer state, and (4) gossip-mixes replicas
+``params ← W @ params``.  ``RoundRecord.consensus_err`` tracks the maximum
+replica deviation from the swarm mean after mixing.  A fully-connected
+mixing matrix makes every neighborhood global and every replica identical,
+which reproduces the centralized engine exactly (property-tested in
+``tests/test_topology.py``).  ``mixing`` may also be a (T, N, N) stack —
+time-varying or churn-coupled graphs from ``core.topology`` — indexed by
+``round % T`` inside the scanned round.
 """
 from __future__ import annotations
 
@@ -114,6 +131,22 @@ class SwarmConfig:
     compression: Optional[str] = None    # None|"qsgd"|"topk"|"powersgd"
     compression_kwargs: Dict = field(default_factory=dict)
     seed: int = 0
+    #: named communication topology (core.topology registry) — setting one
+    #: switches the batched engine to the decentralized round: per-node
+    #: replicas, neighborhood aggregation, gossip mixing.  None = centralized.
+    topology: Optional[str] = None
+    topology_kwargs: Dict = field(default_factory=dict)
+    #: seed for the graph *draw* (random_regular et al.) — deliberately
+    #: separate from ``seed`` so sweeping run seeds varies noise, never the
+    #: graph (the same convention ``derailment.sweep`` uses for its lanes)
+    topology_seed: int = 0
+    #: couple the mixing matrix to the roster's join/leave schedule
+    #: (topology.churn_coupled_mixing): departed or not-yet-joined nodes
+    #: become isolated self-loops, so their replicas freeze instead of
+    #: relaying.  False (default) keeps the graph static — every replica
+    #: mixes forever, the fixed-shape contract that makes a fully-connected
+    #: decentralized swarm reproduce the centralized engine even under churn.
+    churn_coupled: bool = False
 
 
 def corrupt(kind: str, grad_flat: Array, honest_mean: Array, scale: float, key) -> Array:
@@ -164,6 +197,12 @@ class LaneParams(NamedTuple):
     round was built with several (0 otherwise); ``agg_kwargs`` holds *traced*
     aggregator keyword arguments (e.g. a per-run krum ``f`` or centered-clip
     ``clip_tau``) — static kwargs go to :func:`make_round_fn` instead.
+
+    ``mixing`` is the decentralized round's doubly-stochastic mixing matrix
+    — (N, N), or (T, N, N) for time-varying / churn-coupled graphs (indexed
+    by ``round % T``).  It is traced like every other field, so one compiled
+    campaign sweeps *topologies* as a lane axis.  ``None`` (the default)
+    means the round is centralized; all lanes of a campaign must agree.
     """
     codes: Array          # (N,) int32 behaviour codes (BEHAVIOUR_CODES)
     scales: Array         # (N,) f32 byzantine scales
@@ -176,13 +215,15 @@ class LaneParams(NamedTuple):
     numeric_noise: Array  # () f32 simulated cross-stack nondeterminism
     agg_id: Array         # () int32 index into the round's aggregator set
     agg_kwargs: Dict[str, Array]  # traced per-run aggregator kwargs
+    mixing: Optional[Array] = None  # (N, N) | (T, N, N) mixing matrix | None
 
 
 class SwarmState(NamedTuple):
     """The carry of the scanned round: everything that evolves across rounds
     lives on device, so a run never round-trips to the host."""
-    params: Any           # model parameters (pytree)
-    opt_state: Any        # optimizer state (pytree)
+    params: Any           # model parameters (pytree; leading node axis when
+                          # the round is decentralized — per-node replicas)
+    opt_state: Any        # optimizer state (pytree; ditto)
     slashed: Array        # (N,) bool — caught by an audit in a prior round
     contrib: Array        # (N,) f32 — speed-weighted kept rounds (mint counter)
 
@@ -193,14 +234,37 @@ class RoundRecord(NamedTuple):
     n_byzantine: Array    # () int32
     caught: Array         # (N,) bool — slashed in *this* round
     keep: Array           # (N,) bool — active & not caught (minted this round)
-    agg_norm: Array       # () f32
+    agg_norm: Array       # () f32 (decentralized: mean per-node agg norm)
+    consensus_err: Array  # () f32 max *active*-replica deviation from the
+                          # active-replica mean after gossip mixing
+                          # (0 in centralized rounds)
 
 
 def lane_for_nodes(nodes: Sequence[NodeSpec], cfg: SwarmConfig, *,
                    agg_kwargs: Optional[Dict] = None) -> LaneParams:
-    """Build the single-run :class:`LaneParams` for a node roster + config."""
+    """Build the single-run :class:`LaneParams` for a node roster + config.
+    ``cfg.topology`` (if set) resolves to the named Metropolis mixing matrix
+    at this roster size, drawn with ``cfg.topology_seed`` (NOT the run
+    seed — reruns across seeds keep the same graph).  ``cfg.churn_coupled``
+    expands it to the (T, N, N) schedule-coupled stack, T spanning the last
+    membership event (the round consuming it must index with
+    ``mixing_schedule="clamp"`` — the engine wires this automatically)."""
+    from repro.core import topology as topo  # local: keep import cycle-free
     v = cfg.verification
+    mixing = None
+    if cfg.topology is not None:
+        w = topo.mixing_matrix(cfg.topology, len(nodes),
+                               seed=cfg.topology_seed, **cfg.topology_kwargs)
+        if cfg.churn_coupled:
+            joins = np.asarray([n.join_round for n in nodes])
+            leaves = np.asarray([_FAR if n.leave_round is None
+                                 else n.leave_round for n in nodes])
+            events = [int(t) for t in (*joins, *leaves) if 0 < t < _FAR]
+            w = topo.churn_coupled_mixing(
+                w, joins, leaves, rounds=(max(events) + 1) if events else 1)
+        mixing = jnp.asarray(w, jnp.float32)
     return LaneParams(
+        mixing=mixing,
         codes=jnp.asarray([n.behaviour_code for n in nodes], jnp.int32),
         scales=jnp.asarray([n.byzantine_scale for n in nodes], jnp.float32),
         speeds=jnp.asarray([n.speed for n in nodes], jnp.float32),
@@ -218,7 +282,9 @@ def lane_for_nodes(nodes: Sequence[NodeSpec], cfg: SwarmConfig, *,
 
 def stack_lanes(lanes: Sequence[LaneParams]) -> LaneParams:
     """Stack single-run lanes into a campaign (leading run axis on every
-    leaf).  All lanes must share N and the same ``agg_kwargs`` keys."""
+    leaf).  All lanes must share N, the same ``agg_kwargs`` keys, and agree
+    on ``mixing`` (all None = centralized, or all same-shaped matrices =
+    decentralized)."""
     return jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)
 
 
@@ -226,6 +292,23 @@ def init_state(params, optimizer, n_nodes: int) -> SwarmState:
     return SwarmState(params=params, opt_state=optimizer.init(params),
                       slashed=jnp.zeros(n_nodes, bool),
                       contrib=jnp.zeros(n_nodes, jnp.float32))
+
+
+def init_decentralized_state(params, optimizer, n_nodes: int) -> SwarmState:
+    """Per-node replica state: every node starts from the same ``params``
+    with its own (vmapped) optimizer state."""
+    replicas = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (n_nodes,) + l.shape), params)
+    return SwarmState(params=replicas,
+                      opt_state=jax.vmap(optimizer.init)(replicas),
+                      slashed=jnp.zeros(n_nodes, bool),
+                      contrib=jnp.zeros(n_nodes, jnp.float32))
+
+
+def consensus_params(params):
+    """Collapse per-node replicas to the swarm-mean (consensus) params."""
+    return jax.tree.map(lambda l: jnp.mean(l.astype(jnp.float32),
+                                           axis=0).astype(l.dtype), params)
 
 
 def _accepted_kwargs(name: str) -> frozenset:
@@ -240,7 +323,8 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
                   aggregator, agg_kwargs: Optional[Dict] = None,
                   compression_kind: Optional[str] = None,
                   compression_kwargs: Optional[Dict] = None,
-                  verify: bool = False) -> Callable:
+                  verify: bool = False, decentralized: bool = False,
+                  mixing_schedule: str = "cycle") -> Callable:
     """Build the pure round: ``round_fn(lane, state, rnd, batches) ->
     (state, RoundRecord)``.
 
@@ -248,6 +332,24 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
     whether the audit branch exists at all) is baked here; everything
     per-run lives in ``lane`` as traced arrays, so one trace serves every
     lane of a campaign.  ``batches`` is a pytree with leading node axis N.
+
+    ``decentralized=True`` (static — it changes the state shapes) builds
+    the no-central-aggregator round: ``state.params``/``opt_state`` carry a
+    leading node axis, every node gradients its own replica, aggregates its
+    ``lane.mixing``-row neighborhood (neighbor ∧ keep mask through the same
+    masked aggregators), applies its own optimizer update, and replicas
+    gossip-mix ``W @ params``.  Activity gates *contribution* (keep) only:
+    inactive/slashed replicas keep updating from their neighborhood and keep
+    mixing — the decentralized twin of the centralized engine's "inactive
+    nodes still occupy a lane" fixed-shape contract, and what makes a
+    fully-connected graph reproduce the centralized round exactly even
+    under churn.  Nodes whose rounds should truly freeze (leavers) get that
+    via a churn-coupled (T, N, N) ``lane.mixing`` stack
+    (``topology.churn_coupled_mixing``; ``SwarmConfig.churn_coupled`` on
+    the engine).  ``mixing_schedule`` picks how a 3-D stack is indexed:
+    ``"cycle"`` (``round % T`` — periodic time-varying graphs) or
+    ``"clamp"`` (``min(round, T-1)`` — a membership schedule whose graph is
+    constant past its last event).
 
     ``aggregator`` is either one name (static ``agg_kwargs`` apply to it;
     traced ``lane.agg_kwargs`` pass through verbatim) or a sequence of
@@ -270,6 +372,9 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
                              "(name, kwargs) pairs, not via agg_kwargs")
         agg_specs = [(name, dict(kw)) for name, kw in aggregator]
         route_kwargs = True
+    if mixing_schedule not in ("cycle", "clamp"):
+        raise ValueError(f"unknown mixing_schedule: {mixing_schedule!r} "
+                         "(known: 'cycle', 'clamp')")
     # in routed mode an aggregator's *static* kwargs win over same-named
     # traced lane kwargs (call-time kwargs would silently override the
     # functools.partial baked ones otherwise — e.g. a krum regime pinned to
@@ -300,7 +405,10 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
         active = (lane.joins <= rnd) & (rnd < lane.leaves) & (~state.slashed)
         nact = jnp.sum(active.astype(jnp.float32))
 
-        grads = jax.vmap(grad_fn, in_axes=(None, 0))(state.params, batches)
+        # decentralized: every node gradients its OWN replica (leading node
+        # axis on state.params); centralized: all nodes share one params
+        grad_axes = (0, 0) if decentralized else (None, 0)
+        grads = jax.vmap(grad_fn, in_axes=grad_axes)(state.params, batches)
         gf = flatten_stack(grads)                                 # (N, D)
         maskf = active.astype(jnp.float32)[:, None]
         honest_mean = jnp.sum(gf * maskf, axis=0) / jnp.maximum(nact, 1.0)
@@ -337,20 +445,55 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
             caught = audited & (~passes)
         keep = active & (~caught)
 
-        if route_kwargs:
-            outs = [fn(submitted, keep,
-                       **{k: v for k, v in lane.agg_kwargs.items() if k in acc})
-                    for fn, acc in agg_fns]
-            agg = jnp.stack(outs)[lane.agg_id] if len(outs) > 1 else outs[0]
+        def run_aggs(mask):
+            if route_kwargs:
+                outs = [fn(submitted, mask,
+                           **{k: v for k, v in lane.agg_kwargs.items()
+                              if k in acc})
+                        for fn, acc in agg_fns]
+                return jnp.stack(outs)[lane.agg_id] if len(outs) > 1 else outs[0]
+            return agg_fns[0][0](submitted, mask, **lane.agg_kwargs)
+
+        if decentralized:
+            w = lane.mixing.astype(jnp.float32)
+            if w.ndim == 3:              # time-varying / churn-coupled stack
+                t_max = w.shape[0]
+                w = w[jnp.minimum(rnd, t_max - 1)
+                      if mixing_schedule == "clamp" else jnp.mod(rnd, t_max)]
+            # node i robust-aggregates its neighborhood's kept submissions
+            # (Metropolis W has self-loops, so i's own update is in its set)
+            per_keep = (w > 0) & keep[None, :]            # (N, N)
+            agg = jax.vmap(run_aggs)(per_keep)            # (N, D)
+            node_any = jnp.any(per_keep, axis=1)
+            agg = jnp.where(node_any[:, None], agg, jnp.zeros_like(agg))
+            new_params, new_opt = jax.vmap(
+                lambda ok, a, p, o: jax.lax.cond(
+                    ok,
+                    lambda p, o: optimizer.update(unflatten(a), o, p),
+                    lambda p, o: (p, o),
+                    p, o))(node_any, agg, state.params, state.opt_state)
+            # gossip mix the replicas (momentum stays local — standard DSGD)
+            mixed = w @ flatten_stack(new_params)         # (N, P)
+            new_params = jax.vmap(unflatten)(mixed)
+            # consensus over *active* replicas only: under churn-coupled
+            # mixing a departed node's replica freezes (its row is e_i) and
+            # would otherwise dominate the max forever
+            mean_act = (jnp.sum(mixed * maskf, axis=0, keepdims=True)
+                        / jnp.maximum(nact, 1.0))
+            consensus_err = jnp.max(
+                jnp.linalg.norm((mixed - mean_act) * maskf, axis=1))
+            agg_norm = jnp.mean(jax.vmap(jnp.linalg.norm)(agg))
         else:
-            agg = agg_fns[0][0](submitted, keep, **lane.agg_kwargs)
-        any_keep = jnp.any(keep)
-        agg = jnp.where(any_keep, agg, jnp.zeros_like(agg))
-        new_params, new_opt = jax.lax.cond(
-            any_keep,
-            lambda p, o: optimizer.update(unflatten(agg), o, p),
-            lambda p, o: (p, o),
-            state.params, state.opt_state)
+            agg = run_aggs(keep)
+            any_keep = jnp.any(keep)
+            agg = jnp.where(any_keep, agg, jnp.zeros_like(agg))
+            new_params, new_opt = jax.lax.cond(
+                any_keep,
+                lambda p, o: optimizer.update(unflatten(agg), o, p),
+                lambda p, o: (p, o),
+                state.params, state.opt_state)
+            consensus_err = jnp.zeros((), jnp.float32)
+            agg_norm = jnp.linalg.norm(agg)
 
         new_state = SwarmState(
             params=new_params, opt_state=new_opt,
@@ -359,7 +502,8 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
         rec = RoundRecord(
             n_active=jnp.sum(active).astype(jnp.int32),
             n_byzantine=jnp.sum(active & (lane.codes > 0)).astype(jnp.int32),
-            caught=caught, keep=keep, agg_norm=jnp.linalg.norm(agg))
+            caught=caught, keep=keep, agg_norm=agg_norm,
+            consensus_err=consensus_err)
         return new_state, rec
 
     return round_fn
@@ -388,14 +532,19 @@ def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
                  compression_kwargs: Optional[Dict] = None,
                  verify: bool = False, eval_fn: Optional[Callable] = None,
                  batched_data_fn: Optional[Callable] = None,
-                 fast_compile: bool = False):
+                 fast_compile: bool = False, mixing_schedule: str = "cycle"):
     """Run a whole campaign — ``vmap`` over the leading run axis of ``lanes``
     of the scanned round — as **one** jit-compiled device program.
 
     All lanes share the aggregator set (and its static kwargs), the wire
     codec, the data stream, and the initial params; they differ in
     everything :class:`LaneParams` carries (roster behaviour/membership,
-    seed, audit rate/tolerance, aggregator id, traced agg kwargs).
+    seed, audit rate/tolerance, aggregator id, traced agg kwargs, and — in
+    decentralized campaigns — the per-lane mixing matrix, which makes
+    *topology* a campaign axis).  Decentralized mode is detected from
+    ``lanes.mixing`` (all lanes must agree): the round switches to per-node
+    replicas + neighborhood aggregation + gossip mixing, and ``eval_fn``
+    is evaluated on each lane's consensus (node-mean) params.
     Per-round data is computed once and broadcast across lanes (it does not
     depend on the lane), so a campaign costs one gradient batch per (round,
     node) per *lane* but only one data generation per (round, node).
@@ -414,16 +563,24 @@ def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
     run axis on every output leaf (RoundRecord leaves are (R, T, ...)).
     """
     n = int(lanes.codes.shape[-1])
+    decentralized = lanes.mixing is not None
     round_fn = make_round_fn(
         loss_fn, optimizer, params0, n, aggregator=aggregator,
         agg_kwargs=agg_kwargs, compression_kind=compression_kind,
-        compression_kwargs=compression_kwargs, verify=verify)
+        compression_kwargs=compression_kwargs, verify=verify,
+        decentralized=decentralized, mixing_schedule=mixing_schedule)
     if batched_data_fn is None:
         def batch_fn(rnd):
             return jax.vmap(lambda i: data_fn(i, rnd))(jnp.arange(n))
     else:
         batch_fn = batched_data_fn
-    state0 = init_state(params0, optimizer, n)
+    if decentralized:
+        state0 = init_decentralized_state(params0, optimizer, n)
+        if eval_fn is not None:     # evaluate the consensus (mean) replica
+            user_eval = eval_fn
+            eval_fn = lambda p: user_eval(consensus_params(p))
+    else:
+        state0 = init_state(params0, optimizer, n)
 
     def one_run(lane):
         return scan_rounds(round_fn, lane, state0, rounds, batch_fn, eval_fn)
@@ -445,12 +602,14 @@ def history_from_records(recs: RoundRecord, node_ids: Sequence[str], *,
     n_byz = np.asarray(recs.n_byzantine)
     caught = np.asarray(recs.caught)
     agg = np.asarray(recs.agg_norm)
+    cons = np.asarray(recs.consensus_err)
     return [{
         "round": start_round + t,
         "n_active": int(n_active[t]),
         "n_byzantine": int(n_byz[t]),
         "caught": [node_ids[int(i)] for i in np.flatnonzero(caught[t])],
         "agg_norm": float(agg[t]),
+        "consensus_error": float(cons[t]),
     } for t in range(agg.shape[0])]
 
 
@@ -505,6 +664,11 @@ class _SwarmBase:
     def step(self, rnd: int) -> dict:
         raise NotImplementedError
 
+    def eval_params(self):
+        """The params an ``eval_fn`` should see — the decentralized engine
+        overrides this with the consensus (node-mean) replica."""
+        return self.params
+
     def _unflatten(self, vec: Array):
         """Flat fp32 vector -> params-shaped pytree.  Only SequentialSwarm
         uses this (set up lazily from its first gradient); the batched
@@ -522,7 +686,7 @@ class _SwarmBase:
         for r in range(rounds):
             rec = self.step(r)
             if eval_fn and (r % eval_every == 0 or r == rounds - 1):
-                rec["eval_loss"] = float(eval_fn(self.params))
+                rec["eval_loss"] = float(eval_fn(self.eval_params()))
                 losses.append(rec["eval_loss"])
         return losses
 
@@ -540,6 +704,10 @@ class SequentialSwarm(_SwarmBase):
     """
 
     def __init__(self, loss_fn, params, optimizer, nodes, cfg, data_fn):
+        if cfg.topology is not None:
+            raise ValueError("the sequential reference engine is "
+                             "centralized-only; decentralized topologies "
+                             "need engine='batched'")
         super().__init__(loss_fn, params, optimizer, nodes, cfg, data_fn)
         self._grad = jax.jit(jax.grad(loss_fn))
         self._flat_shapes = None
@@ -632,6 +800,7 @@ class SequentialSwarm(_SwarmBase):
             "n_byzantine": sum(1 for _, n in active if n.byzantine),
             "caught": caught,
             "agg_norm": float(jnp.linalg.norm(agg)),
+            "consensus_error": 0.0,        # centralized: one shared params
         }
         self.history.append(rec)
         return rec
@@ -667,6 +836,14 @@ class Swarm(_SwarmBase):
     ``batched_data_fn(rnd) -> batch-with-leading-N-axis`` skips the per-node
     host stacking loop when the data pipeline can produce a stacked batch
     directly (see ``core.scenarios.batched_data_fn_for``).
+
+    ``cfg.topology`` (a ``core.topology`` registry name) switches this
+    engine to the **decentralized** round: ``self.params`` becomes per-node
+    replicas (leading N axis), each round every node neighborhood-aggregates
+    and the replicas gossip-mix, ``history`` rows gain a nonzero
+    ``consensus_error``, and ``eval_params()`` returns the consensus
+    (node-mean) replica for evaluation.  Everything else — step/run/scan
+    dispatch, ledger, slashing — is unchanged.
     """
 
     def __init__(self, loss_fn, params, optimizer, nodes, cfg, data_fn, *,
@@ -674,6 +851,7 @@ class Swarm(_SwarmBase):
         super().__init__(loss_fn, params, optimizer, nodes, cfg, data_fn)
         self.batched_data_fn = batched_data_fn
         n = len(self.nodes)
+        self._decentralized = cfg.topology is not None
         self._lane = lane_for_nodes(self.nodes, cfg)
         self._joins_np = np.asarray([s.join_round for s in self.nodes], np.int32)
         self._leaves_np = np.asarray(
@@ -685,7 +863,13 @@ class Swarm(_SwarmBase):
             aggregator=cfg.aggregator, agg_kwargs=cfg.agg_kwargs,
             compression_kind=cfg.compression,
             compression_kwargs=cfg.compression_kwargs,
-            verify=cfg.verification is not None)
+            verify=cfg.verification is not None,
+            decentralized=self._decentralized,
+            mixing_schedule="clamp" if cfg.churn_coupled else "cycle")
+        if self._decentralized:
+            # per-node replicas + per-node optimizer states from round 0
+            init = init_decentralized_state(self.params, optimizer, n)
+            self.params, self.opt_state = init.params, init.opt_state
         self._round_fn = jax.jit(functools.partial(self._core, self._lane))
         self._scan_cache: Dict[int, Callable] = {}
         self._batches_traceable: Optional[bool] = None
@@ -752,9 +936,14 @@ class Swarm(_SwarmBase):
                                    if self.nodes[int(i)].byzantine)),
             "caught": caught_ids,
             "agg_norm": float(core_rec.agg_norm),
+            "consensus_error": float(core_rec.consensus_err),
         }
         self.history.append(rec)
         return rec
+
+    def eval_params(self):
+        return consensus_params(self.params) if self._decentralized \
+            else self.params
 
     # -- the scanned run ---------------------------------------------------------
     def run(self, rounds: int, eval_fn: Optional[Callable] = None,

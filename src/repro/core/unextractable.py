@@ -101,15 +101,21 @@ def shard_params(params, num_shards: int):
 
 def reconstruct_params(shards: Dict[int, Array], template, num_shards: int,
                        true_size: int):
-    """Reassemble from held shards; missing shards are zero-filled (unusable)."""
-    size = shards[next(iter(shards))].size if shards else 0
-    flat = jnp.zeros((num_shards * size,), jnp.float32)
-    for i, s in shards.items():
-        flat = flat.at[i * size:(i + 1) * size].set(s)
-    flat = flat[:true_size]
+    """Reassemble from held shards; missing shards are zero-filled (unusable).
+
+    A zero-coverage coalition (no shards at all) gets the fully zero-filled
+    template — the degenerate "every shard missing" case, not an error (it
+    used to crash trying to reshape a size-0 flat vector)."""
+    if shards:
+        size = shards[next(iter(shards))].size
+        flat = jnp.zeros((num_shards * size,), jnp.float32)
+        for i, s in shards.items():
+            flat = flat.at[i * size:(i + 1) * size].set(s)
+        flat = flat[:true_size]
+    else:
+        flat = jnp.zeros((true_size,), jnp.float32)
     leaves = jax.tree.leaves(template)
-    out, off = [], 0
-    rebuilt = []
+    rebuilt, off = [], 0
     for l in leaves:
         rebuilt.append(flat[off:off + l.size].reshape(l.shape).astype(l.dtype))
         off += l.size

@@ -80,6 +80,35 @@ def test_breakdown_points():
     assert 0 < aggregation.breakdown_point("krum", 10) < 0.5
 
 
+def test_krum_breakdown_point_is_n_minus_3_over_2n():
+    """Krum tolerates f byzantine iff N >= 2f+3 [6], i.e. f <= (N-3)/2 —
+    so the breakdown *fraction* is (N-3)/2N (the module docstring used to
+    claim (N-2)/2N, which is wrong: f = (N-2)/2 violates N >= 2f+3)."""
+    for n in (9, 10, 11, 16):
+        assert aggregation.breakdown_point("krum", n) == \
+            pytest.approx((n - 3) / (2 * n))
+
+
+def test_masked_krum_at_the_breakdown_boundary():
+    """Pin (N-3)/2N against masked_krum behaviour: with f_max = (N-3)//2
+    colluding attackers krum still selects an honest point; one attacker
+    past the boundary, the attacker cluster is large enough to become its
+    own nearest-neighbour set and krum selects from it."""
+    n = 11
+    f_max = (n - 3) // 2                               # = floor(n * bp) = 4
+    rng = np.random.default_rng(0)
+    honest = rng.normal(size=(n, 8)).astype(np.float32) * 0.1 + 1.0
+    mask = jnp.ones(n, bool)
+
+    x = jnp.asarray(honest).at[:f_max].set(100.0)      # 4 attackers: tolerated
+    out = aggregation.masked_krum(x, mask, f=f_max)
+    assert float(jnp.max(jnp.abs(out - 1.0))) < 1.0
+
+    x = jnp.asarray(honest).at[:f_max + 1].set(100.0)  # 5 attackers: breakdown
+    out = aggregation.masked_krum(x, mask, f=f_max + 1)
+    assert float(jnp.min(out)) > 50.0                  # an attacker row wins
+
+
 # =============================== compression ===================================
 
 
@@ -336,6 +365,19 @@ def test_custody_tolerates_departures():
     nodes = [f"n{i}" for i in range(8)]
     c = ShardCustody.assign(nodes, 16, redundancy=3)
     assert c.tolerates_departures(["n0", "n1"])
+
+
+def test_reconstruct_zero_coverage_returns_zero_template():
+    """Regression: a coalition holding NO shards crashed on reshaping a
+    size-0 vector — it must get the fully zero-filled (unusable) template."""
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 8)),
+              "b": jnp.ones((8,))}
+    _, true_size = shard_params(params, 8)
+    out = reconstruct_params({}, params, 8, true_size)
+    assert jax.tree.structure(out) == jax.tree.structure(params)
+    for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(params)):
+        assert got.shape == want.shape and got.dtype == want.dtype
+        assert float(jnp.abs(got).max()) == 0.0
 
 
 def test_reconstruct_partial_is_garbage():

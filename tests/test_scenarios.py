@@ -251,6 +251,7 @@ def test_registry_has_the_documented_scenarios():
         "honest_baseline", "sign_flip_minority", "inner_product_collusion",
         "high_churn_elastic", "heterogeneous_speed", "compressed_wire",
         "audit_heavy", "derailment_stress",
+        "gossip_ring_honest", "byzantine_neighborhood", "partitioned_swarm",
     }
 
 

@@ -1,0 +1,326 @@
+"""Topology engine coverage: the graph layer (registry, mixing matrices,
+spectral gaps, gossip invariants) and the decentralized swarm round built
+on it.
+
+The load-bearing equivalence: **a fully-connected decentralized swarm
+reproduces the centralized ``Swarm`` exactly** — same history (agg_norm,
+caught sets), same minted balances — because a complete graph makes every
+neighborhood global and every replica identical.  Plus the §5.5 topology
+axis: a (topology × attacker fraction × seed) sweep compiles to ONE device
+program via ``run_campaign``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gossip, topology
+from repro.core.derailment import sweep
+from repro.core.scenarios import Regime, SweepGrid, get_scenario
+from repro.core.swarm import (
+    NodeSpec,
+    SwarmConfig,
+    lane_for_nodes,
+    make_swarm,
+    run_campaign,
+    stack_lanes,
+)
+from repro.optim.optimizer import SGD
+
+from conftest import tiny_quadratic_problem
+
+
+# ----------------------------- graph layer -------------------------------------
+@pytest.mark.parametrize("name", sorted(topology.TOPOLOGIES))
+def test_mixing_matrices_doubly_stochastic(name):
+    """Every registered topology yields a symmetric, nonnegative,
+    doubly-stochastic Metropolis matrix with a positive spectral gap."""
+    w = topology.mixing_matrix(name, 16, seed=0)
+    assert w.shape == (16, 16)
+    np.testing.assert_allclose(w, w.T, atol=1e-12)
+    assert (w >= -1e-12).all()
+    np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-9)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-9)
+    gap = topology.spectral_gap(w)
+    assert 0.0 < gap <= 1.0 + 1e-9, name
+
+
+def test_ring_gap_matches_closed_form():
+    """Metropolis ring: W = 1/3 on the cycle, so λ₂ = 1/3 + 2/3·cos(2π/n)."""
+    n = 12
+    gap = topology.spectral_gap(topology.mixing_matrix("ring", n))
+    expected = 1.0 - (1 / 3 + 2 / 3 * np.cos(2 * np.pi / n))
+    np.testing.assert_allclose(gap, expected, rtol=1e-9)
+
+
+def test_fully_connected_gap_is_one():
+    # W = J/n: one gossip round is the exact mean
+    assert topology.spectral_gap(
+        topology.mixing_matrix("fully_connected", 8)) == pytest.approx(1.0)
+
+
+def test_clustered_gap_below_ring_gap():
+    ring = topology.spectral_gap(topology.mixing_matrix("ring", 16))
+    clustered = topology.spectral_gap(topology.mixing_matrix("clustered", 16))
+    assert 0.0 < clustered < ring
+
+
+def test_torus_degree_and_connectivity():
+    adj = topology.torus_adjacency(16)                 # 4x4
+    assert (adj.sum(1) == 4).all()
+    assert topology.is_connected(adj)
+    assert topology.is_connected(topology.torus_adjacency(13))  # prime -> ring
+
+
+def test_random_regular_connected_across_seeds():
+    """Regression: duplicate ring-perm edges used to silently yield
+    disconnected or under-degree graphs; now every draw is validated and
+    redrawn."""
+    for seed in range(12):
+        adj = topology.random_regular_adjacency(24, 4, seed=seed)
+        assert topology.is_connected(adj), seed
+        assert not adj.diagonal().any()
+        np.testing.assert_array_equal(adj, adj.T)
+        assert adj.sum(1).min() >= 2 and adj.sum(1).max() <= 4
+
+
+def test_consensus_decays_at_spectral_gap_rate():
+    """Gossip contracts the mean-orthogonal component by exactly (1-gap)
+    per round (Frobenius norm) — the geometric-decay invariant."""
+    for name in ("ring", "torus", "random_regular"):
+        w = topology.mixing_matrix(name, 16, seed=1)
+        gap = topology.spectral_gap(w)
+        x = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+        dev0 = np.linalg.norm(np.asarray(x) - np.asarray(x).mean(0))
+        for rounds in (5, 15):
+            out = np.asarray(gossip.gossip_average(x, jnp.asarray(w), rounds))
+            dev = np.linalg.norm(out - out.mean(0))
+            assert dev <= dev0 * (1 - gap) ** rounds * 1.01 + 1e-7, name
+
+
+def test_rounds_for_tolerance_clamped_nonnegative():
+    """Regression: tol >= 1 returned *negative* round counts (-3 for tol=2
+    on an 8-ring); round 0 already satisfies it."""
+    w = topology.mixing_matrix("ring", 8)
+    assert gossip.rounds_for_tolerance(w, 2.0) == 0
+    assert gossip.rounds_for_tolerance(w, 1.0) == 0
+    assert gossip.rounds_for_tolerance(w, 1e-3) > 0
+
+
+def test_rounds_for_tolerance_disconnected_raises():
+    """Regression: a zero-gap (disconnected) graph returned a silent 10**9
+    sentinel; consensus is impossible, so that is now a ValueError."""
+    a = np.zeros((8, 8), bool)
+    a[:4, :4] = topology.ring_adjacency(4)             # two disjoint rings
+    a[4:, 4:] = topology.ring_adjacency(4)
+    w = topology.metropolis_weights(a)
+    with pytest.raises(ValueError, match="spectral gap"):
+        gossip.rounds_for_tolerance(w, 1e-3)
+
+
+def test_time_varying_mixing_every_slice_valid():
+    stack = topology.time_varying_mixing("random_regular", 12, 5, seed=3)
+    assert stack.shape == (5, 12, 12)
+    for t in range(5):
+        np.testing.assert_allclose(stack[t].sum(1), 1.0, atol=1e-9)
+        np.testing.assert_allclose(stack[t], stack[t].T, atol=1e-12)
+    # fresh draws: not all rounds share one graph
+    assert any(not np.allclose(stack[0], stack[t]) for t in range(1, 5))
+
+
+def test_churn_coupled_mixing_isolates_inactive_nodes():
+    w = topology.mixing_matrix("ring", 6)
+    joins = np.array([0, 0, 0, 0, 2, 0])
+    leaves = np.array([10, 10, 1, 10, 10, 10])
+    stack = topology.churn_coupled_mixing(w, joins, leaves, rounds=3)
+    for t in range(3):
+        np.testing.assert_allclose(stack[t].sum(1), 1.0, atol=1e-12)
+        np.testing.assert_allclose(stack[t], stack[t].T, atol=1e-12)
+    # node 4 inactive until round 2, node 2 gone after round 0
+    np.testing.assert_allclose(stack[0][4], np.eye(6)[4])
+    np.testing.assert_allclose(stack[1][2], np.eye(6)[2])
+    assert stack[2][4].max() < 1.0                     # mixing once joined
+    assert stack[0][2].max() < 1.0                     # mixed before leaving
+
+
+def test_unknown_topology_names_registered_ones():
+    with pytest.raises(KeyError, match="registered"):
+        topology.get_topology("moebius")
+
+
+# ------------------- decentralized round == centralized (K_n) ------------------
+@pytest.mark.parametrize("scenario", [
+    "sign_flip_minority",
+    "audit_heavy",
+    "high_churn_elastic",
+    "heterogeneous_speed",
+])
+def test_fully_connected_decentralized_matches_centralized(scenario):
+    """On a complete graph every neighborhood is global and every replica
+    identical, so the decentralized round must reproduce the centralized
+    engine: same history, same caught sets, same minted balances."""
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    nodes, cfg = get_scenario(scenario).build(n_nodes=8, seed=0)
+    dcfg = dataclasses.replace(cfg, topology="fully_connected")
+    opt = lambda: SGD(lr=0.1, momentum=0.0)
+    cen = make_swarm(loss_fn, params0, opt(), nodes, cfg, data_fn)
+    dec = make_swarm(loss_fn, params0, opt(), nodes, dcfg, data_fn)
+    for r in range(12):
+        cen.step(r)
+        dec.step(r)
+    assert [h["n_active"] for h in dec.history] == \
+        [h["n_active"] for h in cen.history]
+    assert [h["caught"] for h in dec.history] == \
+        [h["caught"] for h in cen.history]
+    np.testing.assert_allclose(
+        [h["agg_norm"] for h in dec.history],
+        [h["agg_norm"] for h in cen.history], rtol=2e-3, atol=1e-5,
+        err_msg=scenario)
+    assert all(h["consensus_error"] < 1e-4 for h in dec.history)
+    assert dec.ledger.balances == pytest.approx(cen.ledger.balances)
+    assert dec.ledger.burned_stake == pytest.approx(cen.ledger.burned_stake)
+
+
+def test_decentralized_ring_disagrees_then_converges():
+    """A sparse graph shows real replica disagreement (consensus_error > 0)
+    that gossip drives down; the consensus params still learn."""
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    swarm = get_scenario("gossip_ring_honest").build_swarm(
+        loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn, n_nodes=8)
+    eval_fn = lambda p: loss_fn(p, data_fn(0, 10_000))
+    losses = swarm.run(40, eval_fn=eval_fn)
+    errs = [h["consensus_error"] for h in swarm.history]
+    assert max(errs) > 1e-4                            # genuine disagreement
+    assert errs[-1] < max(errs)                        # gossip contracts it
+    assert losses[-1] < 0.1 * losses[0]                # consensus learns
+
+
+def test_decentralized_scanned_run_matches_step_loop():
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    mk = lambda: get_scenario("byzantine_neighborhood").build_swarm(
+        loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn, n_nodes=8)
+    scanned, stepped = mk(), mk()
+    scanned.run(10)
+    for r in range(10):
+        stepped.step(r)
+    np.testing.assert_allclose(
+        [h["agg_norm"] for h in scanned.history],
+        [h["agg_norm"] for h in stepped.history], rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(
+        [h["consensus_error"] for h in scanned.history],
+        [h["consensus_error"] for h in stepped.history], rtol=1e-4, atol=1e-7)
+
+
+def test_churn_coupled_engine_freezes_leaver_replica():
+    """SwarmConfig.churn_coupled couples the mixing graph to the roster's
+    join/leave schedule: a departed node's replica freezes (isolated
+    self-loop) instead of relaying forever, and consensus_error — which
+    only counts active replicas — stays clean."""
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    nodes = [NodeSpec(f"h{i}") for i in range(5)] + \
+        [NodeSpec("leaver", leave_round=3)]
+    cfg = SwarmConfig(aggregator="mean", topology="ring", churn_coupled=True)
+    swarm = make_swarm(loss_fn, params0, SGD(lr=0.1, momentum=0.0),
+                       nodes, cfg, data_fn)
+    snap = None
+    for r in range(8):
+        swarm.step(r)
+        if r == 3:
+            snap = np.asarray(swarm.params["w"][5]).copy()
+    frozen = np.asarray(swarm.params["w"][5])
+    np.testing.assert_array_equal(frozen, snap)        # replica froze at leave
+    moving = np.asarray(swarm.params["w"][0])
+    assert np.abs(moving - frozen).max() > 1e-6        # active kept training
+    assert all(np.isfinite(h["consensus_error"]) for h in swarm.history)
+
+    # default (static mixing): the departed replica keeps mixing and moves
+    loose = make_swarm(loss_fn, params0, SGD(lr=0.1, momentum=0.0), nodes,
+                       SwarmConfig(aggregator="mean", topology="ring"),
+                       data_fn)
+    for r in range(8):
+        loose.step(r)
+    assert np.abs(np.asarray(loose.params["w"][5]) - frozen).max() > 1e-6
+
+
+def test_sequential_engine_rejects_topology():
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    with pytest.raises(ValueError, match="centralized-only"):
+        make_swarm(loss_fn, params0, SGD(lr=0.1, momentum=0.0),
+                   [NodeSpec("h0"), NodeSpec("h1")],
+                   SwarmConfig(aggregator="mean", topology="ring"), data_fn,
+                   engine="sequential")
+
+
+# ------------------------- the §5.5 topology axis ------------------------------
+def test_topology_axis_sweep_is_one_program():
+    """Acceptance: >= 2 topologies x >= 3 attacker fractions x >= 2 seeds
+    compile to ONE device program via run_campaign, with per-topology
+    baselines and a rendered phase table."""
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    eval_fn = lambda p: loss_fn(p, data_fn(0, 10_000))
+    grid = SweepGrid(
+        name="topo", description="", n_honest=6,
+        attacker_counts=(1, 2, 4), seeds=(0, 1), rounds=8,
+        regimes=(Regime("mean", "mean"),
+                 Regime("centered_clip", "centered_clip")),
+        topologies=("ring", "fully_connected"))
+    res = sweep(loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn,
+                eval_fn, grid)
+    assert res.n_programs == 1
+    assert len(res.results) == grid.n_points == 24
+    assert res.n_runs == 24 + 2 * 2                    # + (topo, seed) baselines
+    assert {r.topology for r in res.results} == {"ring", "fully_connected"}
+    assert all(np.isfinite(r.final_loss) for r in res.results)
+    assert all(np.isfinite(r.baseline_loss) for r in res.results)
+    table = res.phase_table()
+    assert "mean@ring" in table and "centered_clip@fully_connected" in table
+    # K_n decentralized == centralized algebra: mean derails, CC holds at 25%
+    by = {(r.regime, r.topology, r.n_attackers): r for r in res.results}
+    assert by[("mean", "fully_connected", 2)].derailed
+    assert not by[("centered_clip", "fully_connected", 2)].derailed
+
+
+def test_sweep_max_count_cell_matches_simulate_derailment():
+    """At count == max(attacker_counts) the sweep lane's graph and the
+    single-point path's graph coincide (same size, same topology_seed=0
+    draw), so the decentralized cell must reproduce
+    simulate_derailment(topology=...) — including the same-size-graph
+    baseline (attacker slots as never-joining relays)."""
+    from repro.core.derailment import simulate_derailment
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    eval_fn = lambda p: loss_fn(p, data_fn(0, 10_000))
+    grid = SweepGrid(
+        name="parity", description="", n_honest=6, attacker_counts=(3,),
+        seeds=(0,), rounds=8,
+        regimes=(Regime("centered_clip", "centered_clip"),),
+        topologies=("ring",))
+    res = sweep(loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn,
+                eval_fn, grid)
+    (cell,) = res.results
+    single = simulate_derailment(
+        loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn, eval_fn,
+        n_honest=6, n_attack=3, rounds=8, aggregator="centered_clip",
+        topology="ring", seed=0)
+    np.testing.assert_allclose(cell.final_loss, single.final_loss, rtol=2e-3)
+    np.testing.assert_allclose(cell.baseline_loss, single.baseline_loss,
+                               rtol=2e-3)
+    assert cell.derailed == single.derailed
+
+
+def test_time_varying_mixing_lane_runs_in_campaign():
+    """A (T, N, N) churn-coupled mixing stack rides through the scanned
+    round (indexed by round % T) without retracing."""
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    nodes = [NodeSpec(f"h{i}") for i in range(6)]
+    lane = lane_for_nodes(nodes, SwarmConfig(aggregator="mean", seed=0))
+    stack = topology.time_varying_mixing("random_regular", 6, 4, seed=0)
+    lane = lane._replace(mixing=jnp.asarray(stack, jnp.float32))
+    eval_fn = lambda p: loss_fn(p, data_fn(0, 10_000))
+    state, recs, final = run_campaign(
+        loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn,
+        stack_lanes([lane]), rounds=10, aggregator="mean", eval_fn=eval_fn)
+    assert np.isfinite(np.asarray(final)).all()
+    assert np.asarray(recs.consensus_err).shape == (1, 10)
+    assert np.isfinite(np.asarray(recs.consensus_err)).all()

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   §3.2 pipeline_scaling  SWARM square-cube: comm/compute shrinks with d_model
   §3.3 byzantine         attacks x aggregators (+ centered_clip kernel)
   §4.2 verification      stake/slash EV grid + measured catch rate
+  §4.1 custody           coalition reductions + the extractability frontier
   §5.5 derailment        no-off frontier + attack economics
   (g)  roofline          per arch x shape terms from the dry-run artifacts
 """
@@ -25,6 +26,7 @@ MODULES = [
     "bench_pipeline_scaling",
     "bench_byzantine",
     "bench_verification",
+    "bench_custody",
     "bench_derailment",
     "bench_roofline",
 ]

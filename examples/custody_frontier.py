@@ -1,0 +1,90 @@
+"""The extractability frontier (§4.1 × §5.5): at what redundancy and
+coalition fraction does a swarm stop being a Protocol Model?
+
+One ``derailment.sweep`` call compiles the whole custody phase diagram —
+(redundancy × coalition fraction × churn seed), every lane tracing the
+live coverage frontier and running the reconstruct-attack eval — into a
+single device program: the (N, S) custody matrix and the coalition mask
+ride as traced lanes of the campaign, exactly like PR 3's mixing matrix.
+
+    PYTHONPATH=src python examples/custody_frontier.py           # small LM
+    PYTHONPATH=src python examples/custody_frontier.py --tiny    # quadratic
+"""
+import argparse
+
+from repro.core import unextractable as unext
+from repro.core.derailment import no_off_report, sweep
+from repro.core.scenarios import Regime, SweepGrid
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--seeds", type=int, default=3,
+                    help="churn seeds per phase-diagram cell")
+    ap.add_argument("--tiny", action="store_true",
+                    help="convex toy problem instead of the small LM")
+    args = ap.parse_args()
+
+    from common import small_lm_problem, tiny_quadratic_problem
+    loss_fn, params, data_fn, eval_fn, opt = (
+        tiny_quadratic_problem() if args.tiny else small_lm_problem())
+    n_honest, num_shards = 10, 12
+    grid = SweepGrid(
+        name="custody_frontier_example",
+        description="§4.1 extractability frontier",
+        regimes=(Regime("mean", "mean"),),
+        n_honest=n_honest,
+        attacker_counts=(0,),
+        seeds=tuple(range(args.seeds)),
+        rounds=args.rounds,
+        redundancies=(1, 2, 3),
+        coalition_fractions=(0.2, 0.4, 0.6, 0.8, 1.0),
+        num_shards=num_shards,
+        custody_max_fraction=0.4,
+        custody_leave_fraction=0.3,
+    )
+
+    print(f"custody: {num_shards} shards over {n_honest} nodes, per-node "
+          f"bound 0.4; 30% of the roster churns out mid-run")
+    for red in grid.redundancies:
+        c = unext.ShardCustody.assign(
+            [f"h{i}" for i in range(n_honest)], num_shards, redundancy=red,
+            max_fraction=grid.custody_max_fraction)
+        print(f"  redundancy {red}: min extraction coalition "
+              f"{c.min_extraction_coalition(exact=True)} nodes (exact; "
+              f"greedy upper bound {c.min_extraction_coalition()})")
+
+    print(f"\nrunning the {grid.n_points}-point custody phase diagram as "
+          f"one compiled program (coverage trace + reconstruct-attack eval "
+          "inside the program)...")
+    res = sweep(loss_fn, params, opt, data_fn, eval_fn, grid)
+    print(f"  {res.n_runs} runs in {res.n_programs} program, "
+          f"{res.wall_s:.1f}s -> {res.runs_per_s:.2f} runs/s")
+
+    print("\n== §4.1 extractability phase table ==")
+    print(res.extractability_table())
+
+    print("\n== per-cell detail (extracted/honest prices the attack) ==")
+    print(no_off_report(sorted(
+        res.results,
+        key=lambda r: (r.redundancy, r.coalition_fraction, r.seed))))
+
+    print("\nReading: the custody bound draws the frontier.  Below full "
+          "coverage the reconstruct-attack eval shows the coalition "
+          "reassembles garbage — extracted loss far above honest, by as "
+          "many orders of magnitude as training has actually progressed "
+          "(a barely-trained model is cheap to 'steal' because there is "
+          "nothing to steal yet) — the Protocol Model property; the moment "
+          "the coalition "
+          "covers every shard the extracted model IS the model "
+          "(extracted/honest = 1.0).  Redundancy trades the two risks "
+          "against each other: r=1 keeps coalitions small but lets churn "
+          "collapse the live frontier ('degraded' — nobody holds the full "
+          "model any more), higher r survives churn but hands bigger "
+          "coalitions full coverage.  Unextractability is an *operating "
+          "point*, not a free property.")
+
+
+if __name__ == "__main__":
+    main()

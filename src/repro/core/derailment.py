@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import topology
+from repro.core import topology, unextractable
 from repro.core.scenarios import Regime, SweepGrid
 from repro.core.swarm import (
     BEHAVIOUR_CODES,
@@ -61,6 +61,32 @@ class DerailmentResult:
     seed: int = 0
     regime: str = ""
     topology: str = ""      # "" = centralized; else a core.topology name
+    # -- custody axis (redundancy == 0 means the sweep had no custody lane)
+    redundancy: int = 0
+    coalition_fraction: float = 0.0
+    coalition_coverage: float = 1.0   # shard fraction the coalition holds
+    final_coverage: float = 1.0       # live swarm coverage at the last round
+    extracted_loss: float = float("nan")  # reconstruct-attack eval loss
+
+    @property
+    def extractability(self) -> str:
+        """The §4.1 regime of this cell ("" when no custody axis):
+
+        - ``extractable``: the coalition covers every shard — custody
+          failed, the reassembled model IS the model;
+        - ``degraded``: the coalition cannot extract, but churn/slashing
+          drained some shard's last live holder — nobody (including the
+          swarm itself) holds the full model any more;
+        - ``protocol_model``: the coalition is below full coverage and the
+          swarm retains every shard — the §4.1 custody property holds.
+        """
+        if self.redundancy == 0:
+            return ""
+        if self.coalition_coverage >= 1.0 - 1e-9:
+            return "extractable"
+        if self.final_coverage < 1.0 - 1e-9:
+            return "degraded"
+        return "protocol_model"
 
     @property
     def derailed(self) -> bool:
@@ -192,6 +218,42 @@ class SweepResult:
             lines.append(label.ljust(width) + "".join(cells))
         return "\n".join(lines)
 
+    def extractability_table(self) -> str:
+        """The §4.1 extractability phase table: one row per (regime [,
+        topology], redundancy), one column per coalition fraction; each
+        cell shows the regime letter per (seed × count × scale) cell —
+        P = protocol_model, X = extractable, D = degraded — plus the mean
+        coalition shard coverage."""
+        cust = [r for r in self.results if r.redundancy > 0]
+        if not cust:
+            return "(no custody axis in this sweep)"
+        fracs = sorted({r.coalition_fraction for r in cust})
+        rows = sorted({(r.regime, r.topology, r.redundancy) for r in cust})
+        labels = [reg + (f"@{topo}" if topo else "") + f" r={red}"
+                  for reg, topo, red in rows]
+        width = max([24] + [len(l) + 2 for l in labels])
+        head = "custody".ljust(width) + "".join(f"coal={f:.2f}".rjust(16)
+                                                for f in fracs)
+        code = {"protocol_model": "P", "extractable": "X", "degraded": "D"}
+        lines = [head]
+        for (reg, topo, red), label in zip(rows, labels):
+            cells = []
+            for f in fracs:
+                cell = [r for r in cust
+                        if r.regime == reg and r.topology == topo
+                        and r.redundancy == red
+                        and abs(r.coalition_fraction - f) < 1e-9]
+                if not cell:
+                    cells.append("-".rjust(16))
+                    continue
+                marks = "".join(code[r.extractability] for r in cell)
+                cov = sum(r.coalition_coverage for r in cell) / len(cell)
+                cells.append(f"{marks} cov={cov:.2f}".rjust(16))
+            lines.append(label.ljust(width) + "".join(cells))
+        lines.append("(P=protocol_model  X=extractable  D=degraded, one "
+                     "letter per cell; cov = coalition shard coverage)")
+        return "\n".join(lines)
+
 
 @functools.lru_cache(maxsize=None)
 def _seed_key(seed: int):
@@ -202,7 +264,10 @@ def _sweep_lane(n_total: int, n_honest: int, count: int, code: int,
                 scale: float, seed: int,
                 v: Optional[VerificationConfig],
                 agg_id: int, agg_kwargs: Dict,
-                mixing: Optional[np.ndarray] = None) -> LaneParams:
+                mixing: Optional[np.ndarray] = None,
+                leaves: Optional[np.ndarray] = None,
+                custody: Optional[np.ndarray] = None,
+                coalition: Optional[np.ndarray] = None) -> LaneParams:
     """One run lane: honest nodes first, ``count`` attackers, then padding
     that never joins (all regimes share a fixed N so they vmap together).
     Node indices — and therefore the fold_in key schedule — match the
@@ -216,7 +281,10 @@ def _sweep_lane(n_total: int, n_honest: int, count: int, code: int,
     axis stays interpretable), which means decentralized cells equal their
     ``simulate_derailment(topology=...)`` twin — whose graph spans its own
     roster — only at ``count == max(attacker_counts)``, where the sizes
-    coincide (pinned in tests/test_topology.py)."""
+    coincide (pinned in tests/test_topology.py).  ``leaves`` (custody-churn
+    sweeps) overrides the default never-leave schedule; ``custody`` /
+    ``coalition`` are this lane's (n_total, S) custody matrix and (n_total,)
+    extraction-coalition mask (padding rows hold nothing / join nothing)."""
     codes = np.zeros(n_total, np.int32)
     codes[n_honest:n_honest + count] = code
     scales = np.full(n_total, 10.0, np.float32)     # NodeSpec default
@@ -228,7 +296,10 @@ def _sweep_lane(n_total: int, n_honest: int, count: int, code: int,
         scales=scales,
         speeds=np.ones(n_total, np.float32),
         joins=joins,
-        leaves=np.full(n_total, _FAR, np.int32),
+        leaves=(np.full(n_total, _FAR, np.int32) if leaves is None
+                else leaves),
+        custody=custody,
+        coalition=coalition,
         base_key=_seed_key(seed),
         p_check=np.float32(v.p_check if v else 0.0),
         tolerance=np.float32(v.tolerance if v else 1.0),
@@ -252,9 +323,13 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
     compile cost — is shared), topology differences in the traced
     ``mixing`` lane of the decentralized round (``grid.topologies``
     non-empty — every lane then runs per-node replicas + neighborhood
-    aggregation + gossip mixing), and the honest baseline rides along as
-    extra ``count=0`` lanes, computed once per (topology, seed) instead of
-    once per point.
+    aggregation + gossip mixing), custody differences in the traced
+    ``custody``/``coalition`` lanes (``grid.redundancies`` /
+    ``grid.coalition_fractions`` non-empty — every lane then records the
+    live coverage frontier and evals the reconstruct attack, feeding
+    :meth:`SweepResult.extractability_table`), and the honest baseline
+    rides along as extra ``count=0`` lanes, computed once per (topology,
+    seed) instead of once per point.
 
     ``fast_compile=None`` decides automatically: tiny models (≤ 4096
     params) are compile-bound, so they get XLA's fast/low-optimization
@@ -302,24 +377,81 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
     mixings = {t: (topology.mixing_matrix(t, n_total, seed=0)
                    .astype(np.float32) if t else None) for t in topos}
 
+    # the custody axis (§4.1): one custody matrix per (redundancy, count) —
+    # assigned over the slots that actually join (padding rows hold
+    # nothing), drawn with seed 0 like the topology axis (run seeds vary
+    # noise and churn, never who holds what) — and one coalition mask per
+    # (fraction, count): the last ceil(frac * roster) joined slots, i.e.
+    # attackers first.  Both ride as traced lanes, so the whole
+    # (redundancy x coalition x seed) grid shares the one program.
+    has_custody = grid.has_custody
+    reds = (grid.redundancies or (2,)) if has_custody else (0,)
+    cfracs = (grid.coalition_fractions or (0.0,)) if has_custody else (0.0,)
+
+    @functools.lru_cache(maxsize=None)
+    def custody_for(red: int, count: int) -> Optional[np.ndarray]:
+        if not has_custody:
+            return None
+        full = np.zeros((n_total, grid.num_shards), bool)
+        full[:n_honest + count] = unextractable.assign_matrix(
+            n_honest + count, grid.num_shards, red, seed=0,
+            max_fraction=grid.custody_max_fraction)
+        return full
+
+    @functools.lru_cache(maxsize=None)
+    def coalition_for(frac: float, count: int) -> Optional[np.ndarray]:
+        if not has_custody:
+            return None
+        mask = np.zeros(n_total, bool)
+        mask[:n_honest + count] = unextractable.coalition_tail_mask(
+            n_honest + count, frac)
+        return mask
+
+    @functools.lru_cache(maxsize=None)
+    def leaves_for(seed: int) -> Optional[np.ndarray]:
+        """Custody-churn schedule: ``custody_leave_fraction`` of the honest
+        roster leaves on staggered rounds in the back two thirds of the
+        run, drawn per seed — what starves low-redundancy cells into the
+        'degraded' regime.  Gated on the custody axis: without it the
+        results carry no coverage columns, so silent churn would just make
+        losses inexplicably differ from the same grid without the field."""
+        if grid.custody_leave_fraction <= 0 or not has_custody:
+            return None
+        lv = np.full(n_total, _FAR, np.int32)
+        k = min(n_honest - 1, int(grid.custody_leave_fraction * n_honest))
+        rng = np.random.default_rng(10_000 + seed)
+        start = max(1, rounds // 3)
+        for j, i in enumerate(sorted(rng.choice(n_honest, k, replace=False))):
+            lv[int(i)] = start + j % max(1, rounds - start)
+        return lv
+
     lanes, metas = [], []
     for reg in grid.regimes:
         aid = agg_index[(reg.aggregator, tuple(sorted(reg.agg_kwargs.items())))]
         for topo in topos:
-            for count in grid.attacker_counts:
-                for scale in grid.scales:
-                    for seed in grid.seeds:
-                        lanes.append(_sweep_lane(
-                            n_total, n_honest, count, code, scale, seed,
-                            reg.verification, aid, traced_kw(count),
-                            mixing=mixings[topo]))
-                        metas.append((reg, topo, count, scale, seed))
+            for red in reds:
+                for cfrac in cfracs:
+                    for count in grid.attacker_counts:
+                        for scale in grid.scales:
+                            for seed in grid.seeds:
+                                lanes.append(_sweep_lane(
+                                    n_total, n_honest, count, code, scale,
+                                    seed, reg.verification, aid,
+                                    traced_kw(count), mixing=mixings[topo],
+                                    leaves=leaves_for(seed),
+                                    custody=custody_for(red, count),
+                                    coalition=coalition_for(cfrac, count)))
+                                metas.append((reg, topo, red, cfrac, count,
+                                              scale, seed))
     for topo in topos:                      # baseline lanes (count = 0),
-        for seed in grid.seeds:             # shared per (topology, seed)
-            lanes.append(_sweep_lane(
-                n_total, n_honest, 0, code, 0.0, seed, None,
-                agg_index[("mean", ())], traced_kw(0), mixing=mixings[topo]))
-            metas.append((None, topo, 0, 0.0, seed))
+        for seed in grid.seeds:             # shared per (topology, seed);
+            lanes.append(_sweep_lane(      # custody grids: same churn, an
+                n_total, n_honest, 0, code, 0.0, seed, None,   # empty
+                agg_index[("mean", ())], traced_kw(0),          # coalition
+                mixing=mixings[topo], leaves=leaves_for(seed),
+                custody=custody_for(reds[0], 0),
+                coalition=coalition_for(0.0, 0)))
+            metas.append((None, topo, reds[0], 0.0, 0, 0.0, seed))
 
     state, recs, final = run_campaign(
         loss_fn, init_params, optimizer, data_fn, stack_lanes(lanes),
@@ -329,30 +461,45 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
         verify=any(reg.verification is not None for reg in grid.regimes),
         eval_fn=eval_fn, fast_compile=fast_compile)
     slashed = np.asarray(state.slashed)
-    final = np.asarray(final)
+    final = np.asarray(final)               # (R,) — or (R, 2) with custody:
+    if has_custody:                         # [honest, reconstruct-attack]
+        honest_final, extracted_final = final[:, 0], final[:, 1]
+        last_coverage = np.asarray(recs.coverage)[:, -1]
+    else:
+        honest_final = final
 
     results_raw = []
     baselines: Dict[Tuple[str, int], float] = {}
-    for j, (reg, topo, count, scale, seed) in enumerate(metas):
+    for j, (reg, topo, red, cfrac, count, scale, seed) in enumerate(metas):
         if reg is None:
-            baselines[(topo, seed)] = float(final[j])
+            baselines[(topo, seed)] = float(honest_final[j])
         else:
-            results_raw.append((reg, topo, count, scale, seed, float(final[j]),
-                                int(slashed[j, n_honest:n_honest + count].sum())))
+            results_raw.append((j, reg, topo, red, cfrac, count, scale, seed))
+
+    def coalition_coverage(red, cfrac, count) -> float:
+        cov = custody_for(red, count) & coalition_for(cfrac, count)[:, None]
+        return float(cov.any(axis=0).mean())
 
     results = [DerailmentResult(
-        attacker_fraction=count / (n_honest + count),
+        attacker_fraction=count / (n_honest + count) if count else 0.0,
         aggregator=reg.aggregator,
         verified=reg.verification is not None,
-        final_loss=final_loss,
+        final_loss=float(honest_final[j]),
         baseline_loss=baselines[(topo, seed)],
-        attackers_slashed=n_slashed,
+        attackers_slashed=int(slashed[j, n_honest:n_honest + count].sum()),
         n_attackers=count,
         init_loss=init_loss,
         seed=seed,
         regime=reg.name,
         topology=topo,
-    ) for reg, topo, count, scale, seed, final_loss, n_slashed in results_raw]
+        redundancy=red if has_custody else 0,
+        coalition_fraction=cfrac,
+        coalition_coverage=(coalition_coverage(red, cfrac, count)
+                            if has_custody else 1.0),
+        final_coverage=float(last_coverage[j]) if has_custody else 1.0,
+        extracted_loss=(float(extracted_final[j]) if has_custody
+                        else float("nan")),
+    ) for j, reg, topo, red, cfrac, count, scale, seed in results_raw]
     return SweepResult(grid=grid, results=results, n_programs=1,
                        n_runs=len(lanes), wall_s=time.perf_counter() - t0)
 
@@ -375,17 +522,27 @@ def attack_cost(n_attackers: int, rounds: int, *, compute_cost_per_round: float,
 
 def no_off_report(results) -> str:
     """Render the §5.5 analysis from a list of DerailmentResult (a topology
-    column appears when any result is decentralized)."""
+    column appears when any result is decentralized; custody columns —
+    redundancy, coalition coverage, extractability regime, and the
+    reconstruct-attack loss relative to the honest loss — when any result
+    carries the custody axis)."""
     topo = any(r.topology for r in results)
+    cust = any(r.redundancy for r in results)
     head = "attacker_frac  aggregator      "
     head += "topology          " if topo else ""
     head += "verified  derailed  slashed  final/baseline"
+    head += "  r  coal_cov  extractability  extracted/honest" if cust else ""
     lines = [head]
     for r in results:
         t = f"{r.topology or 'centralized':16s}  " if topo else ""
-        lines.append(
+        line = (
             f"{r.attacker_fraction:12.2f}  {r.aggregator:14s}  {t}"
             f"{str(r.verified):8s}"
             f"  {str(r.derailed):8s}  {r.attackers_slashed}/{r.n_attackers:<6d}"
             f"  {r.final_loss / max(r.baseline_loss, 1e-9):6.2f}")
+        if cust:
+            line += (f"  {r.redundancy}  {r.coalition_coverage:8.2f}"
+                     f"  {r.extractability:14s}"
+                     f"  {r.extracted_loss / max(r.final_loss, 1e-9):8.1f}")
+        lines.append(line)
     return "\n".join(lines)

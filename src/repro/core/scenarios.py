@@ -3,9 +3,10 @@
 The paper's claims are claims about *regimes* — honest swarms, byzantine
 minorities, collusion, churn, heterogeneous capacity, lossy wires, audit
 economics, derailment attacks, and (since the topology engine) fully
-decentralized gossip regimes.  Rather than every benchmark, example, and
-test hand-rolling its own ``NodeSpec`` list, this module registers ~11
-named scenarios that all of them consume, so results are comparable across
+decentralized gossip regimes, and (since the custody engine) Protocol-Model
+custody regimes.  Rather than every benchmark, example, and test
+hand-rolling its own ``NodeSpec`` list, this module registers ~13 named
+scenarios that all of them consume, so results are comparable across
 entry points and documented in one place (``docs/scenarios.md``).
 
 A :class:`Scenario` is a factory: it scales to any node count and builds
@@ -54,6 +55,7 @@ from repro.core.swarm import (
     run_campaign,
     stack_lanes,
 )
+from repro.core.unextractable import CustodyConfig
 from repro.core.verification import VerificationConfig
 
 
@@ -262,6 +264,47 @@ register_scenario(Scenario(
 ))
 
 register_scenario(Scenario(
+    name="custody_leech",
+    description=("Unextractability under attack (§4.1): a 25% leech "
+                 "minority submits zero gradients while doubling as the "
+                 "extraction coalition.  Redundancy-2 custody with a 0.4 "
+                 "per-node bound keeps the coalition below full shard "
+                 "coverage, so the reconstruct-attack eval prices their "
+                 "reassembled model as garbage; the live coverage trace "
+                 "stays at 1.0 (leeches keep relaying custody).  The leech "
+                 "count is ceil(n/4) so it coincides with the coalition "
+                 "tail mask (ceil(0.25 * n)) at every roster size."),
+    make_nodes=lambda n: _mixed_nodes(n, -(-n // 4), "zero", 0.0),
+    make_config=lambda seed: SwarmConfig(
+        aggregator="mean", seed=seed,
+        custody=CustodyConfig(num_shards=16, redundancy=2,
+                              max_fraction=0.4, coalition_fraction=0.25)),
+))
+
+def _collapse_nodes(n: int) -> List[NodeSpec]:
+    core = max(2, n // 3)
+    nodes = [NodeSpec(f"core{i}") for i in range(core)]
+    for i in range(n - core):
+        nodes.append(NodeSpec(f"leaver{i}", leave_round=3 + 2 * (i % 4)))
+    return nodes
+
+register_scenario(Scenario(
+    name="custody_churn_collapse",
+    description=("Custody-coupled churn (§4.1 x §3 property 3): two thirds "
+                 "of the swarm departs on staggered rounds and never "
+                 "returns, against redundancy-2 custody.  Once every holder "
+                 "of some shard has left, the live coverage "
+                 "(RoundRecord.coverage) collapses below 1.0 — the model "
+                 "is no longer fully held by anyone; the swarm 'degraded' "
+                 "regime of the extractability phase table."),
+    make_nodes=_collapse_nodes,
+    make_config=lambda seed: SwarmConfig(
+        aggregator="mean", seed=seed,
+        custody=CustodyConfig(num_shards=16, redundancy=2,
+                              max_fraction=0.5)),
+))
+
+register_scenario(Scenario(
     name="partitioned_swarm",
     description=("Near-partition stress (§5.5): two ring clusters joined "
                  "by a single bridge edge (near-zero spectral gap).  "
@@ -326,7 +369,19 @@ class SweepGrid:
     in the decentralized round (per-node replicas, neighborhood
     aggregation, gossip mixing — the mixing matrix rides as a traced lane),
     and honest baselines are shared per (topology, seed).  Empty = the
-    centralized round, exactly as before."""
+    centralized round, exactly as before.
+
+    Non-empty ``redundancies`` / ``coalition_fractions`` add the **custody
+    axis** (§4.1): every cell is additionally crossed with each
+    (redundancy, coalition fraction) pair — the ``(N, num_shards)`` custody
+    matrix and coalition mask ride as traced lanes, the round traces the
+    live coverage frontier, and the eval reports the reconstruct-attack
+    loss next to the honest loss, feeding
+    ``SweepResult.extractability_table``.  ``custody_leave_fraction > 0``
+    staggers that fraction of the honest roster out of the run mid-sweep
+    (drawn per seed), which is what drives redundancy-starved cells into
+    the "degraded" regime — the custody analogue of churn-coupled
+    mixing."""
     name: str
     description: str
     regimes: Tuple[Regime, ...]
@@ -337,12 +392,23 @@ class SweepGrid:
     attack: str = "inner_product"
     rounds: int = 25
     topologies: Tuple[str, ...] = ()
+    redundancies: Tuple[int, ...] = ()
+    coalition_fractions: Tuple[float, ...] = ()
+    num_shards: int = 16
+    custody_max_fraction: float = 0.5
+    custody_leave_fraction: float = 0.0
+
+    @property
+    def has_custody(self) -> bool:
+        return bool(self.redundancies) or bool(self.coalition_fractions)
 
     @property
     def n_points(self) -> int:
         return (len(self.regimes) * len(self.attacker_counts)
                 * len(self.scales) * len(self.seeds)
-                * max(1, len(self.topologies)))
+                * max(1, len(self.topologies))
+                * max(1, len(self.redundancies))
+                * max(1, len(self.coalition_fractions)))
 
 
 SWEEP_GRIDS: Dict[str, SweepGrid] = {}
@@ -417,6 +483,43 @@ register_sweep_grid(SweepGrid(
     attacker_counts=(1, 3, 6),
     seeds=(0, 1),
     rounds=20,
+))
+
+register_sweep_grid(SweepGrid(
+    name="custody_frontier",
+    description=("The §4.1 extractability frontier: at what redundancy and "
+                 "coalition fraction does a swarm stop being a Protocol "
+                 "Model?  (redundancy x coalition fraction x churn seed) "
+                 "cells, each with the reconstruct-attack eval, in one "
+                 "compiled program; a third of the honest roster churns "
+                 "out mid-run, so low-redundancy cells degrade."),
+    regimes=(Regime("mean", "mean"),),
+    n_honest=10,
+    attacker_counts=(0,),
+    seeds=(0, 1, 2),
+    rounds=20,
+    redundancies=(1, 2, 3),
+    coalition_fractions=(0.2, 0.4, 0.6, 0.8, 1.0),
+    num_shards=12,
+    custody_max_fraction=0.4,
+    custody_leave_fraction=0.3,
+))
+
+register_sweep_grid(SweepGrid(
+    name="custody_smoke",
+    description=("CI smoke for the custody axis: 2 redundancies x 2 "
+                 "coalition fractions x 1 seed = 4 tiny runs with the "
+                 "reconstruct-attack eval."),
+    regimes=(Regime("mean", "mean"),),
+    n_honest=6,
+    attacker_counts=(0,),
+    seeds=(0,),
+    rounds=8,
+    redundancies=(1, 2),
+    coalition_fractions=(0.5, 1.0),
+    num_shards=8,
+    custody_max_fraction=0.5,
+    custody_leave_fraction=0.34,
 ))
 
 register_sweep_grid(SweepGrid(

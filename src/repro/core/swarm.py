@@ -63,6 +63,24 @@ which reproduces the centralized engine exactly (property-tested in
 ``tests/test_topology.py``).  ``mixing`` may also be a (T, N, N) stack —
 time-varying or churn-coupled graphs from ``core.topology`` — indexed by
 ``round % T`` inside the scanned round.
+
+**Custody lane** (paper §4.1 meets §5.5): ``SwarmConfig.custody`` (a
+``core.unextractable.CustodyConfig``; ``LaneParams.custody`` /
+``LaneParams.coalition`` on the functional core) rides the Protocol-Model
+custody matrix through the compiled round as a pure *observability* layer —
+it never perturbs the training math, which is what makes a fully-redundant
+custody lane reproduce the plain engine bit-exactly (property-tested in
+``tests/test_custody.py``).  Each round records
+``RoundRecord.coverage`` — the fraction of shards held by at least one
+*active* node, i.e. the live extraction frontier: custody-coupled churn
+zeroes a shard's availability once every holder has left or been slashed
+(the custody analogue of ``churn_coupled_mixing``).  At eval time a
+campaign with a custody lane additionally runs the **reconstruct-attack
+eval** inside the program: the coalition's shards are reassembled
+(``masked_reconstruct``) and evaluated next to the honest params, so the
+final losses come back as an (honest, extracted) pair per lane
+(``core.derailment.sweep`` turns this into the extractability phase
+table).
 """
 from __future__ import annotations
 
@@ -77,6 +95,13 @@ import numpy as np
 
 from repro.core import aggregation, compression
 from repro.core.ledger import Ledger
+from repro.core.unextractable import (
+    CustodyConfig,
+    assign_matrix,
+    coalition_tail_mask,
+    masked_reconstruct,
+    shards_covered,
+)
 from repro.core.verification import VerificationConfig, audit_batch, audit_flat
 
 Array = jax.Array
@@ -147,6 +172,12 @@ class SwarmConfig:
     #: mixes forever, the fixed-shape contract that makes a fully-connected
     #: decentralized swarm reproduce the centralized engine even under churn.
     churn_coupled: bool = False
+    #: Protocol-Model custody lane (core.unextractable.CustodyConfig):
+    #: assigns the (N, S) custody matrix over this roster, traces it through
+    #: the round (RoundRecord.coverage = live extraction frontier), and
+    #: marks the extraction coalition for the reconstruct-attack eval.
+    #: None = no custody tracking.  Never changes the training math.
+    custody: Optional[CustodyConfig] = None
 
 
 def corrupt(kind: str, grad_flat: Array, honest_mean: Array, scale: float, key) -> Array:
@@ -203,6 +234,14 @@ class LaneParams(NamedTuple):
     by ``round % T``).  It is traced like every other field, so one compiled
     campaign sweeps *topologies* as a lane axis.  ``None`` (the default)
     means the round is centralized; all lanes of a campaign must agree.
+
+    ``custody``/``coalition`` are the Protocol-Model custody lane — the
+    (N, S) custody matrix and the (N,) extraction-coalition mask
+    (``core.unextractable``).  Traced like ``mixing``, so one compiled
+    campaign sweeps *redundancy and coalition fraction* as lane axes: the
+    round records the live coverage frontier each round, and the campaign
+    eval reassembles the coalition's shards next to the honest eval.
+    ``None`` (the default) disables custody; all lanes must agree.
     """
     codes: Array          # (N,) int32 behaviour codes (BEHAVIOUR_CODES)
     scales: Array         # (N,) f32 byzantine scales
@@ -216,6 +255,8 @@ class LaneParams(NamedTuple):
     agg_id: Array         # () int32 index into the round's aggregator set
     agg_kwargs: Dict[str, Array]  # traced per-run aggregator kwargs
     mixing: Optional[Array] = None  # (N, N) | (T, N, N) mixing matrix | None
+    custody: Optional[Array] = None    # (N, S) bool custody matrix | None
+    coalition: Optional[Array] = None  # (N,) bool extraction coalition | None
 
 
 class SwarmState(NamedTuple):
@@ -238,6 +279,9 @@ class RoundRecord(NamedTuple):
     consensus_err: Array  # () f32 max *active*-replica deviation from the
                           # active-replica mean after gossip mixing
                           # (0 in centralized rounds)
+    coverage: Array       # () f32 fraction of custody shards held by >= 1
+                          # active node — the live extraction frontier
+                          # (1.0 when the round has no custody lane)
 
 
 def lane_for_nodes(nodes: Sequence[NodeSpec], cfg: SwarmConfig, *,
@@ -248,9 +292,21 @@ def lane_for_nodes(nodes: Sequence[NodeSpec], cfg: SwarmConfig, *,
     seed — reruns across seeds keep the same graph).  ``cfg.churn_coupled``
     expands it to the (T, N, N) schedule-coupled stack, T spanning the last
     membership event (the round consuming it must index with
-    ``mixing_schedule="clamp"`` — the engine wires this automatically)."""
+    ``mixing_schedule="clamp"`` — the engine wires this automatically).
+    ``cfg.custody`` draws the (N, S) custody matrix with ``custody.seed``
+    (same convention: run seeds never reshuffle who holds what) and marks
+    the coalition as the last ``ceil(coalition_fraction * N)`` roster
+    slots."""
     from repro.core import topology as topo  # local: keep import cycle-free
     v = cfg.verification
+    custody = coalition = None
+    if cfg.custody is not None:
+        cc = cfg.custody
+        custody = jnp.asarray(assign_matrix(
+            len(nodes), cc.num_shards, cc.redundancy, cc.seed,
+            cc.max_fraction))
+        coalition = jnp.asarray(
+            coalition_tail_mask(len(nodes), cc.coalition_fraction))
     mixing = None
     if cfg.topology is not None:
         w = topo.mixing_matrix(cfg.topology, len(nodes),
@@ -265,6 +321,8 @@ def lane_for_nodes(nodes: Sequence[NodeSpec], cfg: SwarmConfig, *,
         mixing = jnp.asarray(w, jnp.float32)
     return LaneParams(
         mixing=mixing,
+        custody=custody,
+        coalition=coalition,
         codes=jnp.asarray([n.behaviour_code for n in nodes], jnp.int32),
         scales=jnp.asarray([n.byzantine_scale for n in nodes], jnp.float32),
         speeds=jnp.asarray([n.speed for n in nodes], jnp.float32),
@@ -284,7 +342,8 @@ def stack_lanes(lanes: Sequence[LaneParams]) -> LaneParams:
     """Stack single-run lanes into a campaign (leading run axis on every
     leaf).  All lanes must share N, the same ``agg_kwargs`` keys, and agree
     on ``mixing`` (all None = centralized, or all same-shaped matrices =
-    decentralized)."""
+    decentralized) and on ``custody``/``coalition`` (all None = no custody
+    lane, or all same-shaped matrices/masks)."""
     return jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)
 
 
@@ -495,6 +554,15 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
             consensus_err = jnp.zeros((), jnp.float32)
             agg_norm = jnp.linalg.norm(agg)
 
+        # custody observability: the live extraction frontier — a shard is
+        # available while >= 1 holder is active (custody-coupled churn:
+        # departed/slashed holders zero their shards' availability)
+        if lane.custody is not None:
+            coverage = jnp.mean(jnp.any(lane.custody & active[:, None],
+                                        axis=0).astype(jnp.float32))
+        else:
+            coverage = jnp.ones((), jnp.float32)
+
         new_state = SwarmState(
             params=new_params, opt_state=new_opt,
             slashed=state.slashed | caught,
@@ -503,7 +571,7 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
             n_active=jnp.sum(active).astype(jnp.int32),
             n_byzantine=jnp.sum(active & (lane.codes > 0)).astype(jnp.int32),
             caught=caught, keep=keep, agg_norm=agg_norm,
-            consensus_err=consensus_err)
+            consensus_err=consensus_err, coverage=coverage)
         return new_state, rec
 
     return round_fn
@@ -559,11 +627,20 @@ def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
     ~4x slower end-to-end on the small-LM example).
     ``derailment.sweep`` picks this automatically by parameter count.
 
+    Custody mode is likewise detected from ``lanes.custody`` (all lanes
+    must agree): every round traces ``RoundRecord.coverage`` (the live
+    extraction frontier under churn/slashing), and the eval additionally
+    runs the reconstruct-attack — each lane's final loss comes back as an
+    ``[honest, extracted]`` pair (final losses are (R, 2) instead of (R,)),
+    where ``extracted`` is the loss of the model reassembled from exactly
+    the shards the lane's coalition holds.
+
     Returns ``(final SwarmState, RoundRecord, final losses)`` with a leading
     run axis on every output leaf (RoundRecord leaves are (R, T, ...)).
     """
     n = int(lanes.codes.shape[-1])
     decentralized = lanes.mixing is not None
+    has_custody = lanes.custody is not None
     round_fn = make_round_fn(
         loss_fn, optimizer, params0, n, aggregator=aggregator,
         agg_kwargs=agg_kwargs, compression_kind=compression_kind,
@@ -576,14 +653,26 @@ def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
         batch_fn = batched_data_fn
     if decentralized:
         state0 = init_decentralized_state(params0, optimizer, n)
-        if eval_fn is not None:     # evaluate the consensus (mean) replica
-            user_eval = eval_fn
-            eval_fn = lambda p: user_eval(consensus_params(p))
     else:
         state0 = init_state(params0, optimizer, n)
+    user_eval = eval_fn
 
     def one_run(lane):
-        return scan_rounds(round_fn, lane, state0, rounds, batch_fn, eval_fn)
+        efn = None
+        if user_eval is not None:
+            def efn(p):
+                # decentralized lanes evaluate the consensus (mean) replica
+                pe = consensus_params(p) if decentralized else p
+                honest = user_eval(pe)
+                if not has_custody:
+                    return honest
+                # reconstruct-attack eval: reassemble exactly the shards the
+                # coalition holds (missing ones zero-filled) and price what
+                # the attacker actually gets, inside the same program
+                covered = shards_covered(lane.custody, lane.coalition)
+                extracted = user_eval(masked_reconstruct(pe, covered))
+                return jnp.stack([honest, extracted])
+        return scan_rounds(round_fn, lane, state0, rounds, batch_fn, efn)
 
     fn = jax.jit(jax.vmap(one_run))
     if fast_compile:
@@ -603,6 +692,7 @@ def history_from_records(recs: RoundRecord, node_ids: Sequence[str], *,
     caught = np.asarray(recs.caught)
     agg = np.asarray(recs.agg_norm)
     cons = np.asarray(recs.consensus_err)
+    cov = np.asarray(recs.coverage)
     return [{
         "round": start_round + t,
         "n_active": int(n_active[t]),
@@ -610,6 +700,7 @@ def history_from_records(recs: RoundRecord, node_ids: Sequence[str], *,
         "caught": [node_ids[int(i)] for i in np.flatnonzero(caught[t])],
         "agg_norm": float(agg[t]),
         "consensus_error": float(cons[t]),
+        "coverage": float(cov[t]),
     } for t in range(agg.shape[0])]
 
 
@@ -657,12 +748,29 @@ class _SwarmBase:
         self.slashed: Set[str] = set()
         self.history: List[dict] = []
         self._base_key = jax.random.PRNGKey(cfg.seed)
+        # host copy of the custody matrix (None = no custody lane) — the
+        # engines read coverage from it / from the device record, and
+        # callers can inspect who holds what after a run
+        self.custody_matrix: Optional[np.ndarray] = (
+            assign_matrix(len(self.nodes), cfg.custody.num_shards,
+                          cfg.custody.redundancy, cfg.custody.seed,
+                          cfg.custody.max_fraction)
+            if cfg.custody is not None else None)
         if cfg.verification:
             for n in self.nodes:
                 self.ledger.stake(n.node_id, cfg.verification.stake)
 
     def step(self, rnd: int) -> dict:
         raise NotImplementedError
+
+    def _coverage_of(self, active_idxs: Sequence[int]) -> float:
+        """Live shard coverage of the given active node indices (1.0 when
+        the run has no custody lane)."""
+        if self.custody_matrix is None:
+            return 1.0
+        if not len(active_idxs):
+            return 0.0
+        return float(self.custody_matrix[list(active_idxs)].any(0).mean())
 
     def eval_params(self):
         """The params an ``eval_fn`` should see — the decentralized engine
@@ -801,6 +909,7 @@ class SequentialSwarm(_SwarmBase):
             "caught": caught,
             "agg_norm": float(jnp.linalg.norm(agg)),
             "consensus_error": 0.0,        # centralized: one shared params
+            "coverage": self._coverage_of([i for i, _ in active]),
         }
         self.history.append(rec)
         return rec
@@ -937,6 +1046,7 @@ class Swarm(_SwarmBase):
             "caught": caught_ids,
             "agg_norm": float(core_rec.agg_norm),
             "consensus_error": float(core_rec.consensus_err),
+            "coverage": float(core_rec.coverage),
         }
         self.history.append(rec)
         return rec

@@ -1,25 +1,41 @@
-"""Protocol Models & unextractability (paper §4.1).
+"""Protocol Models & unextractability (paper §4.1) — the custody engine.
 
 A Protocol Model is (1) trustlessly co-trainable and (2) never extractable:
 no coalition can reassemble a usable weight set for less compute than
 retraining.  This module implements the custody layer and the extraction-
-economics analysis the definition rests on:
+economics analysis the definition rests on, in a form the jit(vmap(scan))
+campaign engine can sweep:
 
-- ``ShardCustody``: redundant assignment of parameter shards to nodes
-  (redundancy r for elasticity — Moshpit/SWARM style), with the invariant
-  that a single node holds ≤ max_fraction of the model.
-- coalition analysis: which fraction of the weights a coalition covers, the
-  minimum coalition that covers everything, and the economic comparison
-  cost(acquire missing shards) vs cost(retrain) = 6·N·D.
-- an actual ``reconstruct``: proves extraction *succeeds* exactly when
-  coverage is complete — and that below full coverage the reassembled model
-  is missing shards (tests show its loss is garbage).
+- the custody state is a device-resident ``(N, S)`` boolean **custody
+  matrix** ``holds[n, s]`` (node n holds shard s) — redundant assignment
+  with the invariant that a single node holds ≤ max_fraction of the model
+  (redundancy r for elasticity — Moshpit/SWARM style);
+- coalition analysis is pure jnp reductions over that matrix
+  (:func:`shards_covered` / :func:`coverage_frac` / :func:`can_extract_all`
+  / :func:`tolerates_departures_all` / :func:`missing_shards`), so a whole
+  *stack* of coalitions — or one coalition per campaign lane — evaluates as
+  one vmapped program (``core.swarm`` traces the matrix as
+  ``LaneParams.custody``; ``core.derailment.sweep`` sweeps redundancy ×
+  coalition fraction as campaign axes);
+- :class:`ShardCustody` keeps the original name-keyed API (``assignment``
+  / ``node_shards`` views, ``coverage``/``can_extract``/... methods) as
+  thin wrappers over the matrix, for the server / checkpoint / example
+  layers that speak node ids;
+- an actual reconstruct path: :func:`shard_params` /
+  :func:`reconstruct_params` on the host, and the traced twin
+  :func:`masked_reconstruct` the campaign engine evaluates *inside* the
+  compiled program — extraction succeeds exactly at full coverage, and
+  below it the reassembled model is missing shards (tests show its loss is
+  garbage);
+- the economic comparison cost(acquire missing shards) vs cost(retrain)
+  = 6·N·D (:func:`extraction_cost_flops` / :func:`is_protocol_model`).
 """
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,65 +44,172 @@ import numpy as np
 Array = jax.Array
 
 
+# ============================ assignment =======================================
+def assign_matrix(n_nodes: int, num_shards: int, redundancy: int = 2,
+                  seed: int = 0, max_fraction: float = 0.5) -> np.ndarray:
+    """Round-robin-with-shuffle custody draw honouring the custody bound.
+
+    Returns the ``(n_nodes, num_shards)`` boolean custody matrix.  Each
+    shard is handed to ``redundancy`` distinct nodes, candidates visited in
+    a freshly shuffled order per shard, skipping nodes already at the
+    ``ceil(max_fraction * num_shards)`` per-node cap.  Raises
+    ``ValueError`` when the bound is too tight for the swarm size.  Pure in
+    ``seed`` — the same (n, S, r, seed, bound) always draws the same
+    matrix, which is what lets a sweep share one matrix per redundancy.
+    """
+    if redundancy < 1:
+        # redundancy 0 would never hit the "enough holders" break below and
+        # silently assign every shard to every node under the cap — the
+        # opposite of what the caller asked for
+        raise ValueError(f"redundancy must be >= 1, got {redundancy}")
+    rng = np.random.default_rng(seed)
+    per_node_cap = int(np.ceil(max_fraction * num_shards))
+    holds = np.zeros((n_nodes, num_shards), bool)
+    order = list(range(n_nodes))
+    for s in range(num_shards):
+        rng.shuffle(order)
+        n_holders = 0
+        for n in order:
+            if holds[n].sum() < per_node_cap:
+                holds[n, s] = True
+                n_holders += 1
+            if n_holders == redundancy:
+                break
+        if n_holders < redundancy:
+            raise ValueError("custody bound too tight for this swarm size")
+    return holds
+
+
+# ===================== vectorized coalition analysis ===========================
+# All reductions take the (N, S) custody matrix plus a boolean coalition /
+# departure mask with shape (..., N) — any number of leading batch axes —
+# and reduce over the node axis, so a stacked batch of coalitions (or a
+# vmapped campaign lane) evaluates in one call.
+
+def shards_covered(holds: Array, coalition: Array) -> Array:
+    """(..., N) coalition mask -> (..., S) bool: shards the coalition holds."""
+    return jnp.any(holds & coalition[..., :, None], axis=-2)
+
+
+def coverage_frac(holds: Array, coalition: Array) -> Array:
+    """Fraction of the model's shards the coalition covers: (..., N) -> (...,)."""
+    return jnp.mean(shards_covered(holds, coalition).astype(jnp.float32),
+                    axis=-1)
+
+
+def can_extract_all(holds: Array, coalition: Array) -> Array:
+    """(..., N) -> (...,) bool: coalition covers *every* shard."""
+    return jnp.all(shards_covered(holds, coalition), axis=-1)
+
+
+def tolerates_departures_all(holds: Array, departed: Array) -> Array:
+    """Elasticity: the swarm still holds every shard after the departures
+    marked in the (..., N) mask — (...,) bool."""
+    return jnp.all(jnp.any(holds & ~departed[..., :, None], axis=-2), axis=-1)
+
+
+def missing_shards(holds: Array, coalition: Array) -> Array:
+    """(..., N) -> (...,) int32: shards the coalition does NOT cover."""
+    s = holds.shape[-1]
+    return (s - jnp.sum(shards_covered(holds, coalition), axis=-1)
+            ).astype(jnp.int32)
+
+
+# ============================ ShardCustody =====================================
 @dataclass
 class ShardCustody:
+    """Custody state: the ``(N, S)`` matrix plus the node-id row labels.
+
+    The matrix is the single source of truth; ``assignment`` and
+    ``node_shards`` are derived dict/set *views* kept for the name-keyed
+    consumers (Protocol Model server, custody checkpoints, examples).
+    """
     num_shards: int
     redundancy: int
-    assignment: Dict[int, List[str]]          # shard -> holders
-    node_shards: Dict[str, Set[int]]          # node -> shards held
+    node_ids: Tuple[str, ...]
+    holds: Array                              # (N, S) bool, device-resident
 
     @staticmethod
     def assign(nodes: Sequence[str], num_shards: int, redundancy: int = 2,
                seed: int = 0, max_fraction: float = 0.5) -> "ShardCustody":
         """Round-robin-with-shuffle assignment honouring the custody bound."""
-        rng = np.random.default_rng(seed)
-        per_node_cap = int(np.ceil(max_fraction * num_shards))
-        assignment: Dict[int, List[str]] = {}
-        node_shards: Dict[str, Set[int]] = {n: set() for n in nodes}
-        order = list(nodes)
-        for s in range(num_shards):
-            rng.shuffle(order)
-            holders = []
-            for n in order:
-                if len(node_shards[n]) < per_node_cap:
-                    holders.append(n)
-                    node_shards[n].add(s)
-                if len(holders) == redundancy:
-                    break
-            if len(holders) < redundancy:
-                raise ValueError("custody bound too tight for this swarm size")
-            assignment[s] = holders
-        return ShardCustody(num_shards, redundancy, assignment, node_shards)
+        holds = assign_matrix(len(nodes), num_shards, redundancy, seed,
+                              max_fraction)
+        return ShardCustody(num_shards, redundancy, tuple(nodes),
+                            jnp.asarray(holds))
+
+    # -- name-keyed compat views ------------------------------------------------
+    @property
+    def assignment(self) -> Dict[int, List[str]]:
+        """shard -> holder ids (node order; the matrix is order-free)."""
+        h = np.asarray(self.holds)
+        return {s: [self.node_ids[n] for n in np.flatnonzero(h[:, s])]
+                for s in range(self.num_shards)}
+
+    @property
+    def node_shards(self) -> Dict[str, Set[int]]:
+        """node -> shards held."""
+        h = np.asarray(self.holds)
+        return {nid: set(np.flatnonzero(h[n]).tolist())
+                for n, nid in enumerate(self.node_ids)}
+
+    def coalition_mask(self, coalition: Sequence[str]) -> Array:
+        """Names -> (N,) boolean mask (unknown names are ignored, matching
+        the old dict ``.get(n, set())`` semantics)."""
+        members = set(coalition)
+        return jnp.asarray([nid in members for nid in self.node_ids])
 
     # -- coverage ---------------------------------------------------------------
     def coverage(self, coalition: Sequence[str]) -> float:
-        covered = set()
-        for n in coalition:
-            covered |= self.node_shards.get(n, set())
-        return len(covered) / self.num_shards
+        return float(coverage_frac(self.holds, self.coalition_mask(coalition)))
 
     def can_extract(self, coalition: Sequence[str]) -> bool:
-        return self.coverage(coalition) >= 1.0
-
-    def min_extraction_coalition(self) -> int:
-        """Greedy set-cover lower bound on coalition size for full coverage."""
-        remaining = set(range(self.num_shards))
-        size = 0
-        shards = {n: set(s) for n, s in self.node_shards.items()}
-        while remaining:
-            best = max(shards, key=lambda n: len(shards[n] & remaining), default=None)
-            if best is None or not (shards[best] & remaining):
-                return -1
-            remaining -= shards[best]
-            del shards[best]
-            size += 1
-        return size
+        return bool(can_extract_all(self.holds, self.coalition_mask(coalition)))
 
     def tolerates_departures(self, departed: Sequence[str]) -> bool:
         """Elasticity: the swarm still holds every shard after departures."""
-        gone = set(departed)
-        return all(any(h not in gone for h in holders)
-                   for holders in self.assignment.values())
+        return bool(tolerates_departures_all(self.holds,
+                                             self.coalition_mask(departed)))
+
+    def min_extraction_coalition(self, exact: bool = False) -> int:
+        """Size of a coalition achieving full coverage; -1 if even the full
+        swarm cannot cover.
+
+        Default is greedy set cover — an **upper** bound on the true
+        minimum coalition (within ln S of it, but a bound from above: the
+        real custody guarantee can only be *stronger* than the greedy
+        number suggests).  ``exact=True`` brute-forces subsets in
+        increasing size up to the greedy bound — exponential, meant for
+        the small swarms where the governance question is sharp
+        (property-tested ``exact <= greedy`` in tests/test_properties.py).
+        """
+        h = np.asarray(self.holds)
+        greedy = _greedy_cover(h)
+        if not exact or greedy < 0:
+            return greedy
+        nonempty = [int(n) for n in np.flatnonzero(h.any(axis=1))]
+        for size in range(1, greedy):
+            for combo in itertools.combinations(nonempty, size):
+                if h[list(combo)].any(axis=0).all():
+                    return size
+        return greedy
+
+
+def _greedy_cover(holds: np.ndarray) -> int:
+    """Greedy set cover over the custody matrix (ties -> lowest node index,
+    matching the original dict-insertion-order tie-break)."""
+    remaining = np.ones(holds.shape[1], bool)
+    available = holds.copy()
+    size = 0
+    while remaining.any():
+        gains = (available & remaining).sum(axis=1)
+        best = int(np.argmax(gains))
+        if gains[best] == 0:
+            return -1
+        remaining &= ~available[best]
+        available[best] = False
+        size += 1
+    return size
 
 
 # -- shard/reassemble real parameter trees ---------------------------------------
@@ -122,6 +245,60 @@ def reconstruct_params(shards: Dict[int, Array], template, num_shards: int,
     return jax.tree.unflatten(jax.tree.structure(template), rebuilt)
 
 
+def masked_reconstruct(params, covered: Array):
+    """The traced twin of ``shard_params -> reconstruct_params``: zero-fill
+    the shards *not* in the ``(S,)`` boolean ``covered`` mask of a params
+    pytree, preserving structure/shapes/dtypes.
+
+    Same chunking as :func:`shard_params` (flat fp32 concat, zero-pad to a
+    multiple of S, shard s = contiguous chunk s), but fully jax-traceable —
+    this is what the campaign engine's reconstruct-attack eval runs inside
+    the compiled program to price what a coalition actually gets.  At full
+    coverage it is the identity (exact roundtrip, including bf16 leaves:
+    bf16 -> fp32 -> bf16 is value-preserving)."""
+    leaves = jax.tree.leaves(params)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    num_shards = covered.shape[-1]
+    pad = (-flat.size) % num_shards
+    chunks = jnp.pad(flat, (0, pad)).reshape(num_shards, -1)
+    flat2 = (chunks * covered[:, None]).reshape(-1)[:flat.size]
+    rebuilt, off = [], 0
+    for l in leaves:
+        rebuilt.append(flat2[off:off + l.size].reshape(l.shape).astype(l.dtype))
+        off += l.size
+    return jax.tree.unflatten(jax.tree.structure(params), rebuilt)
+
+
+# ======================= swarm-lane custody config =============================
+@dataclass(frozen=True)
+class CustodyConfig:
+    """Custody lane of a swarm run (``SwarmConfig.custody``).
+
+    ``coalition_fraction`` marks the extraction coalition as the *last*
+    ``ceil(fraction * N)`` roster slots — the same tail convention the
+    scenario/sweep rosters use for attackers (honest first, adversaries
+    appended), so "the byzantine minority doubles as the extraction
+    coalition" needs no extra bookkeeping.  ``seed`` draws the custody
+    matrix and is deliberately separate from the run seed (sweeping run
+    seeds varies noise and churn, never who holds what — the
+    ``topology_seed`` convention)."""
+    num_shards: int = 16
+    redundancy: int = 2
+    seed: int = 0
+    max_fraction: float = 0.5
+    coalition_fraction: float = 0.0
+
+
+def coalition_tail_mask(n_nodes: int, fraction: float) -> np.ndarray:
+    """(N,) bool marking the last ``ceil(fraction * n_nodes)`` roster slots."""
+    k = min(n_nodes, int(math.ceil(fraction * n_nodes)))
+    mask = np.zeros(n_nodes, bool)
+    if k:
+        mask[n_nodes - k:] = True
+    return mask
+
+
 # -- economics (the definition's inequality) ------------------------------------
 def retrain_cost_flops(param_count: int, tokens: int) -> float:
     return 6.0 * param_count * tokens
@@ -131,10 +308,8 @@ def extraction_cost_flops(custody: ShardCustody, coalition: Sequence[str],
                           cost_per_shard_flops: float) -> float:
     """Cost to acquire the shards the coalition is missing, by doing enough
     verified work to be assigned custody of each (join-and-leech strategy)."""
-    covered = set()
-    for n in coalition:
-        covered |= custody.node_shards.get(n, set())
-    missing = custody.num_shards - len(covered)
+    missing = int(missing_shards(custody.holds,
+                                 custody.coalition_mask(coalition)))
     return missing * cost_per_shard_flops
 
 

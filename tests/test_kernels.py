@@ -88,6 +88,52 @@ def test_qsgd_codes_fit_int8():
     assert q.dtype == jnp.int8
 
 
+# -- kernel vs core.compression parity -------------------------------------------
+from repro.core import compression
+
+
+@pytest.mark.parametrize("size", [100, 128])
+@pytest.mark.parametrize("levels", [16, 64, 127])
+def test_qsgd_kernel_matches_compression_roundtrip(size, levels):
+    """The Pallas qsgd op and the swarm wire codec
+    (``compression.roundtrip("qsgd", ...)``) share scale/clip semantics:
+    |x|/norm * levels, floor + stochastic carry from the same
+    ``uniform(key, (R, 128))`` draw, signed magnitudes, decode q/levels*norm.
+    They coincide whenever one compression bucket spans the whole padded
+    tensor — size <= bucket_size == LANE(128), so both pad to the same
+    (1, 128) grid, draw identical uniforms, and use the same (global ==
+    per-bucket) norm.  Tolerance: the two compute the norm with different
+    reduction shapes, so decoded floats agree to ~1 ulp of norm/levels
+    (atol 1e-6 * norm), not bit-for-bit."""
+    key = jax.random.PRNGKey(size + levels)
+    x = jax.random.normal(jax.random.PRNGKey(0), (size,)) * 2
+    kern = qsgd_roundtrip(key, x, levels=levels, interpret=True)
+    wire = compression.roundtrip("qsgd", key, x, levels=levels,
+                                 bucket_size=128)
+    norm = float(jnp.linalg.norm(x))
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(wire),
+                               atol=1e-6 * norm, rtol=0)
+
+
+def test_qsgd_kernel_vs_compression_bucketed_divergence_bounded():
+    """Beyond one bucket the two INTENTIONALLY diverge — the kernel
+    normalizes by the global norm, the wire codec per 128-element bucket
+    (tighter scale per bucket) — but both stay unbiased quantizations of
+    the same tensor, so each is within the QSGD error bound
+    sqrt(d)/levels * ||x|| of the input (and hence within 2 bounds of each
+    other)."""
+    levels, size = 64, 512
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(jax.random.PRNGKey(1), (size,))
+    kern = qsgd_roundtrip(key, x, levels=levels, interpret=True)
+    wire = compression.roundtrip("qsgd", key, x, levels=levels,
+                                 bucket_size=128)
+    bound = np.sqrt(size) / levels * float(jnp.linalg.norm(x))
+    assert float(jnp.linalg.norm(kern - x)) <= bound
+    assert float(jnp.linalg.norm(wire - x)) <= bound
+    assert float(jnp.linalg.norm(kern - wire)) <= 2 * bound
+
+
 # -- centered_clip ---------------------------------------------------------------
 from repro.core.aggregation import centered_clip as cc_ref
 from repro.kernels.centered_clip.ops import centered_clip as cc_kernel
@@ -101,6 +147,24 @@ def test_centered_clip_kernel(n, d, tau, iters):
     b = cc_ref(x, clip_tau=tau, iters=iters)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                rtol=3e-5, atol=3e-5)
+
+
+def test_centered_clip_kernel_matches_masked_aggregation_reference():
+    """The engine-facing form: ``aggregation.masked_centered_clip`` with a
+    full keep-mask is the same fixed-τ iteration the Pallas kernel runs
+    (median warm start, clip(x_i − v, τ), mean step).  Pinned so the
+    masked aggregator the swarm round actually calls and the kernel twin
+    cannot drift apart.  Tolerance 3e-5: fp32 reduction order differs
+    between the blocked kernel and the jnp einsum path."""
+    from repro.core.aggregation import masked_centered_clip
+    x = jax.random.normal(jax.random.PRNGKey(5), (12, 300)) * 2 + 1
+    mask = jnp.ones(12, bool)
+    for tau, iters in [(0.5, 1), (1.5, 4), (10.0, 3)]:
+        a = cc_kernel(x, clip_tau=tau, iters=iters, interpret=True)
+        b = masked_centered_clip(x, mask, clip_tau=tau, iters=iters)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-5, atol=3e-5,
+                                   err_msg=f"tau={tau} iters={iters}")
 
 
 def test_centered_clip_kernel_robust_to_outlier():

@@ -20,6 +20,7 @@ from hypothesis import assume, given, settings
 from hypothesis import strategies as st
 
 from repro.core import aggregation, compression
+from repro.core import unextractable as unext
 from repro.core.ledger import Ledger
 from repro.core.unextractable import ShardCustody
 from repro.data.pipeline import DataConfig, lm_batch
@@ -119,6 +120,85 @@ def test_property_custody_full_swarm_covers(n_nodes, redundancy, seed):
     # redundancy: every shard held by `redundancy` distinct nodes
     for holders in c.assignment.values():
         assert len(set(holders)) == redundancy
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 10), st.integers(4, 20), st.integers(0, 6),
+       st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+def test_property_custody_matrix_matches_dict_oracle(n_nodes, n_shards, seed,
+                                                     density, pick):
+    """The vectorized (N, S) reductions agree with plain python set math on
+    *arbitrary* custody assignments (not just assign_matrix draws) for
+    coverage / can_extract / tolerates_departures / missing_shards."""
+    rng = np.random.default_rng(seed)
+    holds_np = rng.random((n_nodes, n_shards)) < density
+    mask_np = rng.random(n_nodes) < pick
+    holds, mask = jnp.asarray(holds_np), jnp.asarray(mask_np)
+
+    # the dict-based oracle: node -> set of shards, python set unions
+    node_shards = {n: set(np.flatnonzero(holds_np[n]).tolist())
+                   for n in range(n_nodes)}
+    covered = set().union(*(node_shards[n] for n in np.flatnonzero(mask_np)))
+    survives = set().union(*(node_shards[n] for n in range(n_nodes)
+                             if not mask_np[n]))
+
+    assert float(unext.coverage_frac(holds, mask)) == \
+        pytest.approx(len(covered) / n_shards)
+    assert bool(unext.can_extract_all(holds, mask)) == \
+        (len(covered) == n_shards)
+    assert bool(unext.tolerates_departures_all(holds, mask)) == \
+        (len(survives) == n_shards)
+    assert int(unext.missing_shards(holds, mask)) == n_shards - len(covered)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 17), st.integers(0, 5), st.integers(1, 40),
+       st.integers(1, 40))
+def test_property_shard_reconstruct_roundtrip_mixed_dtype(num_shards, seed,
+                                                          size_a, size_b):
+    """shard_params -> reconstruct_params at full coverage is an EXACT
+    roundtrip for mixed fp32/bf16 pytrees, across shard counts that force
+    zero-padding (bf16 -> fp32 -> bf16 is value-preserving)."""
+    k = jax.random.PRNGKey(seed)
+    params = {
+        "w": jax.random.normal(k, (size_a,), jnp.float32),
+        "b": jax.random.normal(jax.random.fold_in(k, 1), (size_b,)
+                               ).astype(jnp.bfloat16),
+    }
+    shards, true_size = unext.shard_params(params, num_shards)
+    out = unext.reconstruct_params(dict(enumerate(shards)), params,
+                                   num_shards, true_size)
+    for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(params)):
+        assert got.dtype == want.dtype and got.shape == want.shape
+        np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                      np.asarray(want, np.float32))
+    # the traced twin agrees leaf for leaf at full coverage too
+    traced = unext.masked_reconstruct(params, jnp.ones(num_shards, bool))
+    for got, want in zip(jax.tree.leaves(traced), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                      np.asarray(want, np.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 8), st.integers(1, 3), st.integers(0, 6))
+def test_property_exact_coalition_at_most_greedy(n_nodes, redundancy, seed):
+    """Greedy set cover is an UPPER bound on the minimum extraction
+    coalition: the exact brute-force answer is never larger, and is itself
+    a feasible cover."""
+    assume(n_nodes * math.ceil(0.6 * 8) >= 8 * redundancy)
+    nodes = [f"n{i}" for i in range(n_nodes)]
+    try:
+        c = ShardCustody.assign(nodes, 8, redundancy=redundancy, seed=seed,
+                                max_fraction=0.6)
+    except ValueError:
+        assume(False)
+    greedy = c.min_extraction_coalition()
+    exact = c.min_extraction_coalition(exact=True)
+    assert 0 < exact <= greedy
+    holds = np.asarray(c.holds)
+    import itertools as it                     # a size-`exact` cover exists
+    assert any(holds[list(combo)].any(0).all()
+               for combo in it.combinations(range(n_nodes), exact))
 
 
 # ============================== data pipeline ==================================

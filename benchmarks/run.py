@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   §3.3 byzantine         attacks x aggregators (+ centered_clip kernel)
   §4.2 verification      stake/slash EV grid + measured catch rate
   §4.1 custody           coalition reductions + the extractability frontier
+  §4.1 serving           scanned decode + continuous batching vs the loop
+                         driver + the (load x churn x redundancy) sweep
   §5.5 derailment        no-off frontier + attack economics
   (g)  roofline          per arch x shape terms from the dry-run artifacts
 """
@@ -27,6 +29,7 @@ MODULES = [
     "bench_byzantine",
     "bench_verification",
     "bench_custody",
+    "bench_serving",
     "bench_derailment",
     "bench_roofline",
 ]

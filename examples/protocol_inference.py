@@ -59,13 +59,15 @@ def main():
 
     # 2. elasticity: serving survives departures (redundancy 2) ...
     online = [n for n in nodes if n != "node3"]
-    logits2 = srv.serve("customer", batch, online_nodes=online)
+    srv.serve("customer", batch, online_nodes=online)
     print(f"node3 offline: still served ({srv.custody.tolerates_departures(['node3'])})")
-    # ... but not a collapsed swarm
+    # ... but not a collapsed swarm — and the failure names the shard ids
+    # the survivors are missing, so the outage is diagnosable
     try:
         srv.serve("customer", batch, online_nodes=nodes[:2])
     except ExtractionError as e:
         print(f"swarm collapsed to 2 nodes -> {e}")
+        print(f"  (missing shard ids: {srv.custody.missing_shards(nodes[:2])})")
 
     # 3. a coalition below full coverage extracts garbage
     coalition = nodes[:3]

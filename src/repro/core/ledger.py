@@ -68,7 +68,19 @@ class Ledger:
 
     # -- inference credentials (§4.1) -----------------------------------------
     def can_infer(self, holder: str, min_shares: float = 0.0) -> bool:
+        """Inference access requires *strictly more* than ``min_shares``
+        (the boundary is exclusive): at the default ``min_shares=0`` a
+        holder with a zero balance — including one who just transferred
+        their entire balance away — is refused, so credentials cannot be
+        spent and kept at the same time.  ``core.serving`` applies the
+        same strict ``balance - fee > min_shares`` gate on device."""
         return self.balances.get(holder, 0.0) > min_shares
+
+    def balance_vector(self, holders: List[str]) -> List[float]:
+        """Vectorized ledger view for the device-side serving engine: the
+        balances of ``holders`` in order (0.0 for unknown names), ready to
+        become ``ServeLane.balances``."""
+        return [self.balances.get(h, 0.0) for h in holders]
 
     def check_conservation(self) -> bool:
         minted = sum(a for op, _, a in self.history if op in ("mint", "jackpot"))

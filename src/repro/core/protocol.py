@@ -7,14 +7,23 @@ shards across participants; a request is served by reassembling activations
 full custody set, which by construction requires the whole swarm); callers
 interact only through logits, never weights; access requires ledger
 credentials.
+
+Serving is cached per *online-node set*: the jitted apply and the
+reconstructed params are built once per distinct set of live custody
+holders and reused while that set recurs (a small LRU bounds the cache —
+heavy churn evicts the oldest sets), instead of re-reconstructing the
+full parameter tree on every request.  For batched multi-token serving
+over a fixed slot pool —
+churn *during* decode, admission queues, the availability phase diagram —
+see ``core.serving`` (the continuous-batching engine this server's
+single-shot ``serve`` is the transparent reference for).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.ledger import Ledger
 from repro.core.unextractable import (
@@ -41,9 +50,18 @@ class ProtocolModelServer:
     model: object                        # repro.models.Model
     custody: ShardCustody
     ledger: Ledger
-    _shards: Dict[str, Dict[int, Array]] = None     # node -> {shard_id: data}
-    _template: object = None
+    _shards: Dict[str, Dict[int, Array]] = field(
+        default_factory=dict, repr=False)    # node -> {shard_id: data}
+    _template: Optional[object] = field(default=None, repr=False)
     _true_size: int = 0
+    #: reconstructed params per frozenset of online nodes — reconstruction
+    #: is O(model size), so churn-stable swarms pay it once, not per
+    #: request.  LRU-bounded: each entry is a full parameter tree, and a
+    #: heavily churning swarm can visit combinatorially many node sets.
+    _params_cache: Dict[frozenset, object] = field(
+        default_factory=dict, repr=False)
+    _jit_prefill: Optional[Callable] = field(default=None, repr=False)
+    cache_size: int = 8
 
     @classmethod
     def create(cls, model, params, nodes: List[str], ledger: Ledger, *,
@@ -61,30 +79,62 @@ class ProtocolModelServer:
         srv._shards = per_node
         srv._template = template
         srv._true_size = true_size
+        srv._jit_prefill = jax.jit(model.prefill)
         return srv
 
-    # -- the only public capability: logits ------------------------------------
-    def serve(self, holder: str, batch, *, online_nodes: Optional[List[str]] = None):
-        if not self.ledger.can_infer(holder):
-            raise CredentialError(f"{holder} holds no credentials")
-        nodes = online_nodes if online_nodes is not None else list(self._shards)
+    # -- protocol-side reassembly ------------------------------------------------
+    def _gather(self, nodes: List[str]) -> Dict[int, Array]:
         gathered: Dict[int, Array] = {}
         for n in nodes:
             gathered.update(self._shards.get(n, {}))
+        return gathered
+
+    def _params_for(self, nodes: List[str]):
+        """Reconstructed params for this online-node set, cached on the
+        set (order-free).  Raises with the *missing shard ids* when the
+        set cannot cover the model, so a serving outage is diagnosable."""
+        key = frozenset(nodes)
+        if key in self._params_cache:
+            self._params_cache[key] = self._params_cache.pop(key)  # LRU bump
+            return self._params_cache[key]
+        gathered = self._gather(nodes)
         if len(gathered) < self.custody.num_shards:
+            missing = self.custody.missing_shards(nodes)
             raise ExtractionError(
-                f"swarm incomplete: {len(gathered)}/{self.custody.num_shards} shards online")
+                f"swarm incomplete: {len(gathered)}/{self.custody.num_shards} "
+                f"shards online, missing shard ids {missing}")
         params = reconstruct_params(gathered, self._template,
                                     self.custody.num_shards, self._true_size)
-        return self.model.prefill(params, batch)
+        while len(self._params_cache) >= max(1, self.cache_size):
+            self._params_cache.pop(next(iter(self._params_cache)))
+        self._params_cache[key] = params
+        return params
+
+    # -- the only public capability: logits ------------------------------------
+    def serve(self, holder: str, batch, *,
+              online_nodes: Optional[List[str]] = None):
+        if not self.ledger.can_infer(holder):
+            raise CredentialError(f"{holder} holds no credentials")
+        nodes = online_nodes if online_nodes is not None else list(self._shards)
+        return self._jit_prefill(self._params_for(nodes), batch)
+
+    def decode(self, holder: str, prompts: Array, max_new: int, *,
+               online_nodes: Optional[List[str]] = None):
+        """Credential-gated batched greedy decoding through the scanned
+        serving path (``core.serving.greedy_decode``) — multi-token
+        inference without ever exposing the reconstructed weights."""
+        from repro.core import serving
+        if not self.ledger.can_infer(holder):
+            raise CredentialError(f"{holder} holds no credentials")
+        nodes = online_nodes if online_nodes is not None else list(self._shards)
+        return serving.greedy_decode(self.model, self._params_for(nodes),
+                                     prompts, max_new)
 
     # -- what an attacker coalition gets ----------------------------------------
     def attempt_extraction(self, coalition: List[str]):
         """Returns the (broken) params a coalition can reassemble — tests show
         they are unusable below full coverage."""
-        gathered: Dict[int, Array] = {}
-        for n in coalition:
-            gathered.update(self._shards.get(n, {}))
+        gathered = self._gather(coalition)
         if len(gathered) >= self.custody.num_shards:
             raise ExtractionError(
                 "coalition covers the full model — custody bound violated; "

@@ -171,6 +171,16 @@ class ShardCustody:
         return bool(tolerates_departures_all(self.holds,
                                              self.coalition_mask(departed)))
 
+    def missing_shards(self, coalition: Sequence[str]) -> List[int]:
+        """The shard *ids* the coalition does NOT cover (the module-level
+        :func:`missing_shards` is its traced twin and returns the count) —
+        what a failed serve/extraction should report so the outage is
+        diagnosable: which shards, hence (via ``assignment``) which
+        departed holders."""
+        covered = np.asarray(shards_covered(self.holds,
+                                            self.coalition_mask(coalition)))
+        return [int(s) for s in np.flatnonzero(~covered)]
+
     def min_extraction_coalition(self, exact: bool = False) -> int:
         """Size of a coalition achieving full coverage; -1 if even the full
         swarm cannot cover.

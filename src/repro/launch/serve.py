@@ -1,77 +1,48 @@
-"""Batched serving driver: prefill + KV-cache/recurrent-state decode.
+"""Serving driver over the unified Model API.
 
-Serves any model family through the unified Model API.  Two modes:
+The token loops live in ``core.serving`` now: :func:`greedy_decode` is the
+jitted *scanned* decoder (prefill = ``Model.decode_scan``, decode =
+``lax.scan`` over ``decode_step``), and :func:`greedy_decode_loop` is the
+replaced per-token python loop, kept as the reference oracle and benchmark
+baseline.  This module is the CLI:
 
-- plain       : params held locally (the centralized baseline).
-- protocol    : inference through ``core.protocol.ProtocolModelServer`` —
-  weights exist only as custody shards across swarm nodes, requests need
-  ledger credentials, and the driver demonstrates that a partial coalition
-  cannot serve (the §4.1 unextractability property, live).
+- ``--driver scan``   : the scanned greedy decoder (default);
+- ``--driver loop``   : the old python loop (reference / baseline);
+- ``--driver engine`` : the continuous-batching engine
+  (``core.serving.ServingEngine``) — fixed decode slots, arrival-ordered
+  admission, per-slot KV caches, custody-gated availability — serving a
+  queue of requests in one compiled scan.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass
-from typing import List, Optional
-
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.models.model import Model, build_model
-
-Array = jax.Array
-
-
-@dataclass
-class ServeStats:
-    prefill_s: float
-    decode_s: float
-    tokens_out: int
-    batch: int
-
-    @property
-    def tok_per_s(self) -> float:
-        return self.tokens_out * self.batch / max(self.decode_s, 1e-9)
-
-
-def greedy_decode(model: Model, params, prompts: Array, max_new: int,
-                  *, cache_len: Optional[int] = None):
-    """prompts: (B, S0) int32.  Returns (B, max_new) generated tokens."""
-    b, s0 = prompts.shape
-    cache_len = cache_len or (s0 + max_new)
-    cache = model.init_cache(b, cache_len)
-
-    decode = jax.jit(model.decode_step)
-
-    t0 = time.time()
-    # prefill by stepping the prompt through decode (exact; works for all
-    # families incl. recurrent ones)
-    logits = None
-    for i in range(s0):
-        logits, cache = decode(params, prompts[:, i:i + 1], cache)
-    prefill_s = time.time() - t0
-
-    t0 = time.time()
-    outs: List[Array] = []
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    for _ in range(max_new):
-        outs.append(tok)
-        logits, cache = decode(params, tok, cache)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    decode_s = time.time() - t0
-
-    gen = jnp.concatenate(outs, axis=1)
-    return gen, ServeStats(prefill_s, decode_s, max_new, b)
+from repro.core.serving import (  # noqa: F401  (re-exported API)
+    ServeStats,
+    ServingConfig,
+    ServingEngine,
+    build_lane,
+    greedy_decode,
+    greedy_decode_loop,
+)
+from repro.models.model import build_model
 
 
 def main(argv=None):
+    import numpy as np
+
     import argparse
     ap = argparse.ArgumentParser(description="CPU serving driver")
     ap.add_argument("--arch", default="protocol-125m")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--driver", default="scan",
+                    choices=("scan", "loop", "engine"))
+    ap.add_argument("--batch", type=int, default=4,
+                    help="batch (scan/loop) or request count (engine)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="engine: decode slot-pool size")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
@@ -79,8 +50,32 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(0))
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size)
-    gen, stats = greedy_decode(model, params, prompts, args.max_new)
-    print(f"arch={cfg.name} batch={stats.batch} "
+
+    if args.driver == "engine":
+        scfg = ServingConfig(
+            slots=args.slots, max_new=args.max_new,
+            steps=args.prompt_len + args.max_new
+            + (args.prompt_len + args.max_new)
+            * ((args.batch + args.slots - 1) // args.slots))
+        lane = build_lane(
+            n_requests=args.batch,
+            prompt_lens=np.full(args.batch, args.prompt_len, np.int32),
+            max_new=args.max_new,
+            steps=scfg.steps, n_nodes=8, balances=[float(args.batch)] * 4,
+            fee=1.0, load=1.0)
+        engine = ServingEngine(model, scfg, prompts)
+        engine.run(params, lane)                     # warm the program
+        res = engine.run(params, lane)
+        print(f"arch={cfg.name} engine slots={scfg.slots} "
+              f"requests={args.batch} served={int(res.done.sum())} "
+              f"tokens={res.tokens_served} ({res.tok_per_s:.1f} tok/s, "
+              f"availability {res.availability:.2f})")
+        print("sample:", res.tokens[0, :16].tolist())
+        return
+
+    decode = greedy_decode if args.driver == "scan" else greedy_decode_loop
+    gen, stats = decode(model, params, prompts, args.max_new)
+    print(f"arch={cfg.name} driver={args.driver} batch={stats.batch} "
           f"prefill={stats.prefill_s:.2f}s decode={stats.decode_s:.2f}s "
           f"({stats.tok_per_s:.1f} tok/s)")
     print("sample:", gen[0, :16].tolist())

@@ -61,6 +61,20 @@ class Model:
     def init_cache(self, batch: int, seq_len: int):
         return _family_module(self.cfg).init_cache(self.cfg, batch, seq_len)
 
+    def decode_scan(self, params, tokens: Array, cache):
+        """Scanned multi-token decode (the serving engine's prefill hook):
+        feed ``tokens`` (B, T) one position at a time through
+        ``decode_step`` inside a single ``lax.scan``, returning the stacked
+        per-position logits (B, T, V) and the advanced cache.  Exact for
+        every family (recurrent ones included) — it is the same math as the
+        per-token python loop, compiled into one program."""
+        def body(c, tok):
+            logits, c = self.decode_step(params, tok[:, None], c)
+            return c, logits[:, 0]
+
+        cache, logits = jax.lax.scan(body, cache, jnp.moveaxis(tokens, 1, 0))
+        return jnp.moveaxis(logits, 0, 1), cache
+
     # -- dry-run input specs (no allocation) -----------------------------------
     def batch_specs(self, shape: ShapeConfig, *, with_labels: bool = True) -> Dict[str, Any]:
         cfg = self.cfg

@@ -132,6 +132,44 @@ def test_protocol_server_gates_and_serves(tiny_model):
     assert float(jnp.max(jnp.abs(broken_logits - ref))) > 1e-2
 
 
+def test_protocol_server_caches_per_online_set(tiny_model):
+    """serve() reconstructs params once per online-node set (cached on the
+    frozenset, order-free) instead of per request, and a failed gather
+    names the missing shard ids."""
+    cfg, model, params = tiny_model
+    from repro.core.ledger import Ledger
+    from repro.core.protocol import ExtractionError, ProtocolModelServer
+    nodes = [f"n{i}" for i in range(6)]
+    led = Ledger()
+    led.record_contribution("n0", 1.0)
+    srv = ProtocolModelServer.create(model, params, nodes, led,
+                                     num_shards=12, redundancy=2,
+                                     max_fraction=0.4)
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32)}
+    srv.serve("n0", batch)
+    assert len(srv._params_cache) == 1
+    cached = srv._params_cache[frozenset(nodes)]
+    srv.serve("n0", batch, online_nodes=list(reversed(nodes)))  # same set
+    assert len(srv._params_cache) == 1
+    assert srv._params_cache[frozenset(nodes)] is cached        # reused
+    # a different (still-covering) set is a separate entry
+    survivors = [n for n in nodes if n != "n5"]
+    if srv.custody.tolerates_departures(["n5"]):
+        srv.serve("n0", batch, online_nodes=survivors)
+        assert len(srv._params_cache) == 2
+    # failure is diagnosable: the error names the uncovered shard ids
+    with pytest.raises(ExtractionError) as err:
+        srv.serve("n0", batch, online_nodes=nodes[:1])
+    missing = srv.custody.missing_shards(nodes[:1])
+    assert str(missing) in str(err.value)
+    # the scanned decode path serves tokens without exposing weights
+    prompts = jnp.zeros((2, 4), jnp.int32)
+    gen, _ = srv.decode("n0", prompts, 3)
+    from repro.core.serving import greedy_decode
+    ref, _ = greedy_decode(model, params, prompts, 3)
+    np.testing.assert_array_equal(np.asarray(gen), np.asarray(ref))
+
+
 # ------------------------------ checkpoint -------------------------------------
 def test_checkpoint_roundtrip(tiny_model, tmp_path):
     cfg, model, params = tiny_model

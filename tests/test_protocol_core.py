@@ -330,6 +330,45 @@ def test_ledger_transfer_and_credentials():
         led.transfer("a", "user", 100.0)
 
 
+def test_ledger_credential_spend_is_strict():
+    """The can_infer boundary is strict (> min_shares): a holder who
+    transfers their ENTIRE balance away is subsequently refused — spending
+    credentials and keeping them are mutually exclusive."""
+    led = Ledger()
+    led.record_contribution("a", 2.0)
+    assert led.can_infer("a")
+    led.transfer("a", "user", 2.0)             # entire balance away
+    assert not led.can_infer("a")              # 0.0 > 0.0 is False
+    assert led.can_infer("user")
+    # the boundary itself: exactly min_shares is refused, above is served
+    assert not led.can_infer("user", min_shares=2.0)
+    assert led.can_infer("user", min_shares=1.9)
+
+
+def test_ledger_conservation_under_transfer_then_slash():
+    """Transfers move shares without minting; slashing after a transfer
+    burns only what the slashed node still holds — conservation
+    (total + burned == minted) holds through the whole sequence."""
+    led = Ledger()
+    led.record_contribution("a", 3.0)
+    led.record_contribution("b", 2.0)
+    led.stake("b", 5.0)
+    led.transfer("b", "a", 1.5)                # b keeps 0.5
+    assert led.check_conservation()
+    lost = led.slash("b")
+    assert lost == pytest.approx(5.5)          # 5.0 stake + 0.5 shares
+    assert led.burned == pytest.approx(0.5)    # transferred shares survive
+    assert led.balances["a"] == pytest.approx(4.5)
+    assert led.check_conservation()
+
+
+def test_ledger_balance_vector_view():
+    led = Ledger()
+    led.record_contribution("a", 2.0)
+    led.record_contribution("b", 1.0)
+    assert led.balance_vector(["b", "ghost", "a"]) == [1.0, 0.0, 2.0]
+
+
 def test_ledger_slash_burns():
     led = Ledger()
     led.stake("evil", 5.0)
@@ -359,6 +398,21 @@ def test_no_single_node_extracts():
         assert not c.can_extract([n])
     assert c.can_extract(nodes)
     assert c.min_extraction_coalition() >= 3       # ceil(1 / 0.4)
+
+
+def test_custody_missing_shard_ids():
+    """ShardCustody.missing_shards returns the uncovered shard *ids*
+    (diagnosable outages), consistent with the traced count reduction."""
+    from repro.core.unextractable import missing_shards as missing_count
+    nodes = [f"n{i}" for i in range(8)]
+    c = ShardCustody.assign(nodes, 16, redundancy=2, max_fraction=0.4)
+    assert c.missing_shards(nodes) == []
+    ids = c.missing_shards(nodes[:2])
+    held = set()
+    for n in nodes[:2]:
+        held |= c.node_shards[n]
+    assert ids == sorted(set(range(16)) - held)
+    assert len(ids) == int(missing_count(c.holds, c.coalition_mask(nodes[:2])))
 
 
 def test_custody_tolerates_departures():

@@ -1,0 +1,173 @@
+"""Fused Pallas round path (kernels/): rounds/s, fused vs unfused.
+
+Times the identical swarm round — qsgd wire + masked centered_clip over an
+(N, D) stack — built with ``make_round_fn(fused=False)`` (the historical
+per-op jnp path) and ``fused=True`` (payload-native decode-accumulate +
+network-sort median warm start + flash-style CC, conformance-pinned
+bit-equal by tests/test_kernel_conformance.py).  Two settings:
+
+  tiny    N=8,  D=8 192       (CI smoke — below FUSED_MIN_BYTES, forced on)
+  large   N=16, D=1 048 576   (64 MiB stack — the acceptance setting:
+                               fused must be >= 2x unfused rounds/s)
+
+The model/data term is a thin quadratic (batch (8, 64) @ w (64, D/64)) so
+the round is dominated by the wire + aggregation phases the kernels own.
+Alongside wall time, the compiled HLO is priced with the trip-count-aware
+cost model (launch/hlo_cost.py) and held against the TPU v5e roofline
+peaks (launch/roofline.py): bytes/round vs the raw stack, achieved host
+bytes/s, and what the same program would be bound by at peak.
+
+CLI:  ``python benchmarks/bench_round_fused.py [--tiny] [--json F]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.core.swarm import (_FAR, LaneParams, init_state, make_round_fn,
+                              scan_rounds)
+from repro.launch import roofline
+from repro.launch.hlo_cost import analyze_hlo
+from repro.optim.optimizer import SGD
+
+#: filled by run() for the --json artifact
+LAST_META: dict = {}
+
+_WIRE = {"levels": 16, "bucket_size": 1024}
+
+
+def _problem(n: int, d_cols: int):
+    """loss = ||x @ w − x @ t||², w (64, d_cols) → D = 64·d_cols params with
+    an O(1)-sized data stream (x is (8, 64) per node per round)."""
+    target = jax.random.normal(jax.random.PRNGKey(0), (64, d_cols)) * 0.1
+
+    def loss_fn(params, batch):
+        return jnp.mean(jnp.square(batch["x"] @ params["w"]
+                                   - batch["x"] @ target))
+
+    def batch_fn(rnd):
+        k = jax.random.fold_in(jax.random.PRNGKey(7), rnd)
+        return {"x": jax.random.normal(k, (n, 8, 64))}
+
+    return loss_fn, {"w": jnp.zeros((64, d_cols))}, batch_fn
+
+
+def _lane(n: int) -> LaneParams:
+    return LaneParams(
+        codes=jnp.zeros((n,), jnp.int32), scales=jnp.ones((n,)),
+        speeds=jnp.ones((n,)), joins=jnp.zeros((n,), jnp.int32),
+        leaves=jnp.full((n,), _FAR, jnp.int32),
+        base_key=jax.random.PRNGKey(11), p_check=jnp.asarray(0.0),
+        tolerance=jnp.asarray(1e-3), numeric_noise=jnp.asarray(0.0),
+        agg_id=jnp.asarray(0, jnp.int32), agg_kwargs={})
+
+
+def _compile(n: int, d_cols: int, rounds: int, fused: bool):
+    loss_fn, params0, batch_fn = _problem(n, d_cols)
+    opt = SGD(lr=0.05, momentum=0.0)
+    rf = make_round_fn(loss_fn, opt, params0, n, aggregator="centered_clip",
+                       compression_kind="qsgd", compression_kwargs=_WIRE,
+                       fused=fused)
+
+    def prog(lane):
+        return scan_rounds(rf, lane, init_state(params0, opt, n),
+                           rounds, batch_fn)
+
+    compiled = jax.jit(prog).lower(_lane(n)).compile()
+    return compiled, rf
+
+
+def _time_per_round(compiled, lane, rounds: int, repeats: int) -> float:
+    out = compiled(lane)                      # warm (allocs, transfers)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(lane))
+        best = min(best, time.perf_counter() - t0)
+    return best / rounds
+
+
+def _bench_setting(name: str, n: int, d_cols: int, rounds: int,
+                   repeats: int) -> list:
+    rows: list[Row] = []
+    lane = _lane(n)
+    d = 64 * d_cols
+    per_round = {}
+    hlo_by_mode = {}
+    for fused in (False, True):
+        compiled, rf = _compile(n, d_cols, rounds, fused)
+        sec = _time_per_round(compiled, lane, rounds, repeats)
+        per_round[fused] = sec
+        hlo_by_mode[fused] = analyze_hlo(compiled.as_text(), total_devices=1)
+        mode = "fused" if fused else "unfused"
+        rows.append((
+            f"round_fused.{name}.{mode}", sec * 1e6,
+            f"{1.0 / sec:.2f} rounds/s (N={n} D={d} "
+            f"stack={rf.stack_bytes / 2**20:.2f}MiB qsgd+centered_clip)"))
+
+    speedup = per_round[False] / per_round[True]
+    target = " (target >=2x)" if name == "large" else ""
+    rows.append((f"round_fused.{name}.speedup", 0.0,
+                 f"{speedup:.2f}x fused over unfused rounds/s{target}"))
+
+    # model-priced traffic for the fused program, against v5e peaks
+    cost = hlo_by_mode[True]
+    stack = n * d * 4
+    bpr = cost.bytes_accessed / rounds
+    fpr = cost.flops / rounds
+    achieved = bpr / per_round[True]
+    r = roofline.Roofline(flops_per_device=fpr, bytes_per_device=bpr,
+                          wire_bytes_per_device=0.0,
+                          model_flops_global=fpr, num_chips=1)
+    rows.append((
+        f"round_fused.{name}.fused.traffic", 0.0,
+        f"hlo={bpr / 2**20:.1f}MiB/round ({bpr / max(stack, 1):.1f}x stack) "
+        f"flops={fpr:.2e} host={achieved / 1e9:.2f}GB/s="
+        f"{achieved / roofline.HBM_BW:.1%} of v5e HBM; at peak "
+        f"{r.dominant}-bound {roofline.fmt_seconds(r.bound_s).strip()}/round"))
+
+    LAST_META[name] = {
+        "n": n, "d": d, "rounds": rounds,
+        "unfused_s_per_round": per_round[False],
+        "fused_s_per_round": per_round[True],
+        "speedup": speedup,
+        "fused_hlo_bytes_per_round": bpr,
+        "fused_hlo_flops_per_round": fpr,
+        "unfused_hlo_bytes_per_round":
+            hlo_by_mode[False].bytes_accessed / rounds,
+        "achieved_host_bytes_per_s": achieved,
+    }
+    return rows
+
+
+def run(tiny_only: bool = False) -> list:
+    rows = _bench_setting("tiny", n=8, d_cols=128, rounds=3, repeats=3)
+    if not tiny_only:
+        rows += _bench_setting("large", n=16, d_cols=16384, rounds=2,
+                               repeats=2)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: tiny setting only")
+    ap.add_argument("--json", default=None, metavar="FILE",
+                    help="dump rows + metadata as JSON")
+    args = ap.parse_args()
+
+    rows = run(tiny_only=args.tiny)
+    emit(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": [{"name": n, "us_per_call": us, "derived": d}
+                               for n, us, d in rows],
+                       "settings": LAST_META}, f, indent=2)

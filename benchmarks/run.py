@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   §4.1 serving           scanned decode + continuous batching vs the loop
                          driver + the (load x churn x redundancy) sweep
   §5.5 derailment        no-off frontier + attack economics
+  §3.3 round_fused       fused Pallas round path vs per-op jnp, rounds/s
   (g)  roofline          per arch x shape terms from the dry-run artifacts
 """
 from __future__ import annotations
@@ -31,6 +32,7 @@ MODULES = [
     "bench_custody",
     "bench_serving",
     "bench_derailment",
+    "bench_round_fused",
     "bench_roofline",
 ]
 

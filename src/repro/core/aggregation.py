@@ -143,7 +143,9 @@ def centered_clip(updates: Array, *, clip_tau: float | None = None,
 # expresses membership/slashing as a boolean keep-mask, so the jitted round
 # never changes shape on churn.  Each ``masked_*`` aggregator therefore must
 # equal its dense counterpart applied to the compacted subset
-# ``updates[mask]`` (property-tested in tests/test_scenarios.py).  The shared
+# ``updates[mask]`` (property-tested in tests/test_scenarios.py); under total
+# churn (``mask.sum() == 0``, no dense counterpart exists) the krum family
+# and centered_clip return zeros — a no-op step.  The shared
 # tricks: NaN-padding + ``nanmedian`` for medians, +inf-padding + rank masks
 # for order statistics with a *traced* kept-count k.
 #
@@ -178,11 +180,15 @@ def masked_trimmed_mean(updates: Array, mask: Array, *, trim: int = 1) -> Array:
     return total / jnp.maximum(k - 2 * t, 1).astype(updates.dtype)
 
 
-def _masked_krum_scores(updates: Array, mask: Array, f: int) -> Array:
-    """Krum scores over the kept subset; masked-out rows score +inf."""
-    n = updates.shape[0]
+def _krum_scores_from_d2(d2: Array, mask: Array, f: int) -> Array:
+    """Krum's O(N²) selection phase given raw pairwise squared distances.
+
+    Shared by the reference (broadcast d2) and the fused path (streamed
+    gram-form d2 from ``kernels.masked_agg``) so selection semantics have a
+    single source of truth.  Masked-out rows score +inf.
+    """
+    n = d2.shape[0]
     k_act = jnp.sum(mask.astype(jnp.int32))
-    d2 = jnp.sum(jnp.square(updates[:, None, :] - updates[None, :, :]), axis=-1)
     pair_ok = mask[:, None] & mask[None, :] & ~jnp.eye(n, dtype=bool)
     d2 = jnp.where(pair_ok, d2, jnp.inf)
     k_near = jnp.maximum(k_act - f - 2, 1)
@@ -196,9 +202,19 @@ def _masked_krum_scores(updates: Array, mask: Array, f: int) -> Array:
     return jnp.where(mask, jnp.minimum(scores, big), jnp.inf)
 
 
+def _masked_krum_scores(updates: Array, mask: Array, f: int) -> Array:
+    """Krum scores over the kept subset; masked-out rows score +inf."""
+    d2 = jnp.sum(jnp.square(updates[:, None, :] - updates[None, :, :]), axis=-1)
+    return _krum_scores_from_d2(d2, mask, f)
+
+
 def masked_krum(updates: Array, mask: Array, *, f: int = 1) -> Array:
     scores = _masked_krum_scores(updates, mask, f)
-    return updates[jnp.argmin(scores)]
+    row = updates[jnp.argmin(scores)]
+    # Total churn (mask.sum() == 0): no update survives — define the
+    # aggregate as zero (a no-op step) rather than whatever row argmin of
+    # an all-inf score vector lands on.
+    return jnp.where(jnp.any(mask), row, jnp.zeros_like(row))
 
 
 def masked_multi_krum(updates: Array, mask: Array, *, f: int = 1, m: int = 0) -> Array:
@@ -214,7 +230,8 @@ def masked_multi_krum(updates: Array, mask: Array, *, f: int = 1, m: int = 0) ->
     scores = _masked_krum_scores(updates, mask, f)
     order = jnp.argsort(scores)                          # best first, masked last
     sel = (jnp.arange(n) < m_eff)[:, None]
-    return jnp.sum(jnp.where(sel, updates[order], 0.0), axis=0) / m_eff.astype(updates.dtype)
+    out = jnp.sum(jnp.where(sel, updates[order], 0.0), axis=0) / m_eff.astype(updates.dtype)
+    return jnp.where(jnp.any(mask), out, jnp.zeros_like(out))
 
 
 def masked_centered_clip(updates: Array, mask: Array, *, clip_tau: float | None = None,
@@ -232,7 +249,9 @@ def masked_centered_clip(updates: Array, mask: Array, *, clip_tau: float | None 
         return v + step, None
 
     v, _ = jax.lax.scan(body, v, None, length=iters)
-    return v
+    # Total churn: the all-NaN warm start would propagate NaN through every
+    # iteration — define the empty aggregate as zero (a no-op step).
+    return jnp.where(jnp.any(mask), v, jnp.zeros_like(v))
 
 
 MASKED_AGGREGATORS: Dict[str, Callable] = {

@@ -103,6 +103,8 @@ from repro.core.unextractable import (
     shards_covered,
 )
 from repro.core.verification import VerificationConfig, audit_batch, audit_flat
+from repro.kernels.masked_agg import ops as masked_agg_ops
+from repro.kernels.qsgd_decode import ops as qsgd_decode_ops
 
 Array = jax.Array
 
@@ -178,6 +180,9 @@ class SwarmConfig:
     #: marks the extraction coalition for the reconstruct-attack eval.
     #: None = no custody tracking.  Never changes the training math.
     custody: Optional[CustodyConfig] = None
+    #: fused hot path (kernels.masked_agg + kernels.qsgd_decode): None =
+    #: auto by stack size (see make_round_fn), True = force, False = never.
+    fused: Optional[bool] = None
 
 
 def corrupt(kind: str, grad_flat: Array, honest_mean: Array, scale: float, key) -> Array:
@@ -204,8 +209,20 @@ def _corrupt_all(codes: Array, gf: Array, honest_mean: Array, scales: Array,
     :func:`corrupt`.  Written as arithmetic selects rather than a vmapped
     ``lax.switch``: with per-node codes vmap evaluates every branch anyway,
     and the flat form is measurably cheaper to trace and compile inside the
-    scanned campaign round (sweeps are compile-bound)."""
-    noise = jax.vmap(lambda k, g: jax.random.normal(k, g.shape))(keys, gf)
+    scanned campaign round (sweeps are compile-bound).
+
+    The (N, D) normal draw is the one expensive branch input (threefry over
+    the full stack, ~1s/round at N=16, D=1M on CPU), so it runs under a
+    ``lax.cond`` on "any noise node in the roster": rosters without noise
+    attackers skip it entirely.  Bit-exact either way — when the cond takes
+    the zeros branch no select ever reads the noise values (and under vmap,
+    where cond lowers to both-branches select, this is exactly the old
+    unconditional draw)."""
+    any_noise = jnp.any(codes == BEHAVIOUR_CODES["noise"])
+    noise = jax.lax.cond(
+        any_noise,
+        lambda: jax.vmap(lambda k, g: jax.random.normal(k, g.shape))(keys, gf),
+        lambda: jnp.zeros_like(gf))
     c, s = codes[:, None], scales[:, None]
     out = jnp.where(c == BEHAVIOUR_CODES["sign_flip"], -s * gf, gf)
     out = jnp.where(c == BEHAVIOUR_CODES["scale"], s * gf, out)
@@ -383,7 +400,8 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
                   compression_kind: Optional[str] = None,
                   compression_kwargs: Optional[Dict] = None,
                   verify: bool = False, decentralized: bool = False,
-                  mixing_schedule: str = "cycle") -> Callable:
+                  mixing_schedule: str = "cycle",
+                  fused: Optional[bool] = None) -> Callable:
     """Build the pure round: ``round_fn(lane, state, rnd, batches) ->
     (state, RoundRecord)``.
 
@@ -418,6 +436,19 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
     / corruption / audit machinery — the bulk of the compile cost — is
     compiled once).  In that mode each aggregator receives only the
     ``lane.agg_kwargs`` entries its signature accepts.
+
+    ``fused`` selects the fused hot path (``kernels.masked_agg`` +
+    ``kernels.qsgd_decode``): aggregators run their fused twins, and a
+    qsgd wire keeps the compressed payload (int8 codes + bucket norms) live
+    into aggregation instead of a decoded fp32 stack.  ``None`` (default)
+    auto-enables it when the round is centralized, every aggregator has a
+    fused twin, the wire is uncompressed or int8-codeable qsgd, and the
+    (N, D) fp32 stack crosses ``masked_agg.ops.FUSED_MIN_BYTES``.
+    ``True`` forces it (raising on unsupported combinations); ``False``
+    forces the reference path.  Fused == unfused bit-for-bit except krum's
+    distance arithmetic (selection-equal away from exact score ties) —
+    pinned by tests/test_kernel_conformance.py.  The resolved choice is
+    exposed as ``round_fn.fused``.
     """
     leaves = jax.tree.leaves(params_template)
     treedef = jax.tree.structure(params_template)
@@ -438,9 +469,34 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
     # traced lane kwargs (call-time kwargs would silently override the
     # functools.partial baked ones otherwise — e.g. a krum regime pinned to
     # f=4 must not pick up the per-lane f meant for the auto-f krum regime)
-    agg_fns = [(aggregation.get_masked_aggregator(name, **kw),
-                _accepted_kwargs(name) - set(kw)) for name, kw in agg_specs]
     ckw = dict(compression_kwargs or {})
+
+    # -- fused hot-path resolution (static) ------------------------------------
+    d_total = sum(int(np.prod(shape)) if shape else 1 for shape, _ in shapes)
+    stack_bytes = n_nodes * d_total * 4
+    fusable_aggs = all(name in masked_agg_ops.FUSED_MASKED_AGGREGATORS
+                       for name, _ in agg_specs)
+    fusable_wire = (compression_kind is None
+                    or (compression_kind == "qsgd"
+                        and ckw.get("levels", 16) <= 127))
+    fused_ok = (not decentralized) and fusable_aggs and fusable_wire
+    if fused is None:
+        fused = fused_ok and stack_bytes >= masked_agg_ops.FUSED_MIN_BYTES
+    elif fused and not fused_ok:
+        raise ValueError(
+            "fused=True unsupported here: needs a centralized round, "
+            f"aggregators within {sorted(masked_agg_ops.FUSED_MASKED_AGGREGATORS)} "
+            f"(got {[n for n, _ in agg_specs]}), and an uncompressed or "
+            f"int8-codeable qsgd wire (got {compression_kind!r}, "
+            f"levels={ckw.get('levels', 16)})")
+    fused_qsgd = fused and compression_kind == "qsgd"
+
+    # kwarg routing always reads the *reference* signatures — the fused
+    # twins deliberately share names and keyword surface
+    getter = (masked_agg_ops.get_fused_aggregator if fused
+              else aggregation.get_masked_aggregator)
+    agg_fns = [(getter(name, **kw),
+                _accepted_kwargs(name) - set(kw)) for name, kw in agg_specs]
     grad_fn = jax.grad(loss_fn)
     idx = jnp.arange(n_nodes)
 
@@ -459,6 +515,11 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
 
     def wire(key, g):
         return compression.roundtrip(compression_kind, key, g, **ckw)
+
+    def wire_payload(key, g):
+        """Fused qsgd wire: encode only — the int8 payload stays live into
+        aggregation (decode happens inside the fused aggregator / audit)."""
+        return qsgd_decode_ops.wire_encode(key, g, **ckw)
 
     def round_fn(lane: LaneParams, state: SwarmState, rnd, batches):
         active = (lane.joins <= rnd) & (rnd < lane.leaves) & (~state.slashed)
@@ -485,7 +546,10 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
             allk[_AUDIT_SEL], allk[_AUDIT_NOISE]
         corrupted = _corrupt_all(lane.codes, gf, honest_mean, lane.scales, ck)
 
-        submitted = jax.vmap(wire)(wk, corrupted)
+        if fused_qsgd:
+            submitted = jax.vmap(wire_payload)(wk, corrupted)
+        else:
+            submitted = jax.vmap(wire)(wk, corrupted)
 
         caught = jnp.zeros(n_nodes, bool)
         if verify:                           # static: baked at trace time
@@ -500,7 +564,9 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
             # the validator recomputes the honest gradient and re-encodes it
             # with the submitter's wire key (see SequentialSwarm.step)
             recomputed = jax.vmap(wire)(wk, gf)
-            passes, _ = audit_batch(submitted, recomputed, nk, vcfg)
+            audited_view = (qsgd_decode_ops.wire_decode(submitted)
+                            if fused_qsgd else submitted)
+            passes, _ = audit_batch(audited_view, recomputed, nk, vcfg)
             caught = audited & (~passes)
         keep = active & (~caught)
 
@@ -574,6 +640,8 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
             consensus_err=consensus_err, coverage=coverage)
         return new_state, rec
 
+    round_fn.fused = fused                    # resolved choice, inspectable
+    round_fn.stack_bytes = stack_bytes
     return round_fn
 
 
@@ -600,7 +668,8 @@ def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
                  compression_kwargs: Optional[Dict] = None,
                  verify: bool = False, eval_fn: Optional[Callable] = None,
                  batched_data_fn: Optional[Callable] = None,
-                 fast_compile: bool = False, mixing_schedule: str = "cycle"):
+                 fast_compile: bool = False, mixing_schedule: str = "cycle",
+                 fused: Optional[bool] = None):
     """Run a whole campaign — ``vmap`` over the leading run axis of ``lanes``
     of the scanned round — as **one** jit-compiled device program.
 
@@ -645,7 +714,8 @@ def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
         loss_fn, optimizer, params0, n, aggregator=aggregator,
         agg_kwargs=agg_kwargs, compression_kind=compression_kind,
         compression_kwargs=compression_kwargs, verify=verify,
-        decentralized=decentralized, mixing_schedule=mixing_schedule)
+        decentralized=decentralized, mixing_schedule=mixing_schedule,
+        fused=fused)
     if batched_data_fn is None:
         def batch_fn(rnd):
             return jax.vmap(lambda i: data_fn(i, rnd))(jnp.arange(n))
@@ -974,7 +1044,8 @@ class Swarm(_SwarmBase):
             compression_kwargs=cfg.compression_kwargs,
             verify=cfg.verification is not None,
             decentralized=self._decentralized,
-            mixing_schedule="clamp" if cfg.churn_coupled else "cycle")
+            mixing_schedule="clamp" if cfg.churn_coupled else "cycle",
+            fused=cfg.fused)
         if self._decentralized:
             # per-node replicas + per-node optimizer states from round 0
             init = init_decentralized_state(self.params, optimizer, n)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracles — the engine's masked aggregators ARE the reference."""
+from __future__ import annotations
+
+from repro.core.aggregation import (  # noqa: F401
+    _masked_median as masked_median_ref,
+    masked_centered_clip as masked_centered_clip_ref,
+    masked_krum as masked_krum_ref,
+    masked_mean as masked_mean_ref,
+)
+
+import jax.numpy as jnp
+
+
+def masked_krum_d2_ref(updates):
+    """Broadcast-form pairwise squared distances (the reference's d2)."""
+    x = updates.astype(jnp.float32)
+    return jnp.sum(jnp.square(x[:, None, :] - x[None, :, :]), axis=-1)

@@ -45,3 +45,25 @@ def qsgd_roundtrip(key, x: Array, *, levels: int = 64, interpret: bool = False):
 def wire_bits(x: Array) -> int:
     """int8 code per element + fp32 norm."""
     return x.size * 8 + 32
+
+
+def single_bucket_regime(size: int, *, bucket_size: int = 1024) -> bool:
+    """True iff this kernel (one global norm, LANE-padded draws) and the
+    bucketed wire codec ``compression.qsgd_compress`` quantize identically.
+
+    Two facts make the regimes coincide:
+    (1) threefry uniform draws depend only on the *total* padded element
+        count, so ``uniform(key, (r, LANE))`` equals
+        ``uniform(key, (1, r*LANE))`` reshaped, bit for bit;
+    (2) zero padding never changes a bucket's L2 norm.
+
+    Hence the codecs agree exactly when the wire codec produces a single
+    bucket whose padded width matches the kernel's LANE padding:
+    ``size <= bucket_size`` and ``ceil(size/LANE)*LANE == bucket_size``.
+    Outside this regime the per-bucket norms genuinely differ from the
+    global norm and divergence is bounded by the QSGD error bound
+    (√d/levels · ‖x‖) instead — tests/test_kernels.py pins both regimes
+    explicitly against this predicate.
+    """
+    rows = -(-size // LANE)
+    return size <= bucket_size and rows * LANE == bucket_size

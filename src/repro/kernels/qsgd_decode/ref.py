@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: decode through the wire codec, then masked-mean.
+
+The reference path is exactly what the unfused round does — reconstruct
+the full (N, D) stack via ``compression.qsgd_decompress`` semantics, then
+apply the weights — so the conformance suite pins the fused
+decode-accumulate against the engine's own arithmetic.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_stack_ref(payload):
+    """QsgdPayload batch (N, nb, B) -> decoded (N, size) f32 stack, using
+    the reference sign/magnitude decode (signed zeros and all)."""
+    q = jnp.abs(payload.codes).astype(jnp.float32)
+    sign = payload.codes < 0
+    mag = q / payload.levels * payload.norms
+    dec = jnp.where(sign, -mag, mag)
+    n = dec.shape[0]
+    return dec.reshape(n, -1)[:, :payload.size]
+
+
+def decode_accumulate_ref(payload, weights):
+    dec = decode_stack_ref(payload)
+    return jnp.sum(dec * weights[:, None].astype(jnp.float32), axis=0)

@@ -9,6 +9,9 @@ import pytest
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running (subprocess compile/dry-run) tests")
+    config.addinivalue_line(
+        "markers", "kernels: Pallas kernel conformance suite "
+        "(run standalone with `pytest -m kernels`; included in tier-1)")
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,229 @@
+"""Dedicated unit tests for the launch-layer cost models on tiny programs
+with hand-computable numbers.
+
+``test_launch.py`` exercises ``analyze_hlo`` end-to-end on real XLA-lowered
+programs; here the HLO text is *synthetic* so every expected FLOP/byte count
+is exact by construction — parser regressions show up as precise numeric
+diffs, not tolerance drift.  The roofline half pins the ring wire-byte
+model, the three roofline terms, and the small formatting/model-FLOP
+helpers used by the dry-run reports and ``bench_round_fused``.
+"""
+import pytest
+
+from repro.launch.hlo_cost import (
+    HloCost, analyze_hlo, parse_module, _multiplicities, _wire_bytes)
+from repro.launch import roofline
+from repro.launch.roofline import (
+    CollectiveOp, Roofline, collective_summary, fmt_seconds, model_flops,
+    parse_collectives)
+
+
+# ------------------------------ synthetic HLO ----------------------------------
+DOT_HLO = """\
+HloModule tiny_dot
+
+ENTRY %main (a: f32[4,8], b: f32[8,16]) -> f32[4,16] {
+  %a = f32[4,8]{1,0} parameter(0)
+  %b = f32[8,16]{1,0} parameter(1)
+  ROOT %dot = f32[4,16]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+LOOP_HLO = """\
+HloModule tiny_loop
+
+%body (p: (s32[], f32[4,8], f32[8,8])) -> (s32[], f32[4,8], f32[8,8]) {
+  %p = (s32[], f32[4,8], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4,8]{1,0} get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} get-tuple-element(%p), index=2
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  %y = f32[4,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[4,8], f32[8,8]) tuple(%ip, %y, %w)
+}
+
+%cond (p: (s32[], f32[4,8], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[4,8], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[4,8], w: f32[8,8]) -> (s32[], f32[4,8], f32[8,8]) {
+  %x = f32[4,8]{1,0} parameter(0)
+  %w = f32[8,8]{1,0} parameter(1)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[4,8], f32[8,8]) tuple(%z, %x, %w)
+  ROOT %wh = (s32[], f32[4,8], f32[8,8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+}
+"""
+
+COLL_HLO = """\
+HloModule tiny_coll
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[256]) -> f32[256] {
+  %x = f32[256]{0} parameter(0)
+  ROOT %ar = f32[256]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+
+
+def test_parse_module_symbols_and_entry():
+    comps, entry = parse_module(DOT_HLO)
+    assert entry == "main"
+    main = comps["main"]
+    assert main.symbols["a"] == [("f32", (4, 8))]
+    assert main.symbols["dot"] == [("f32", (4, 16))]
+    kinds = {op.kind for op in main.ops}
+    assert kinds == {"parameter", "dot"}
+    dot = next(op for op in main.ops if op.kind == "dot")
+    assert dot.operands == ["a", "b"]
+
+
+def test_dot_program_exact_flops_and_bytes():
+    cost = analyze_hlo(DOT_HLO, total_devices=1)
+    # 2 * numel(result) * contracting dim
+    assert cost.flops == 2 * (4 * 16) * 8
+    # dot is the only materializing op: operands + result
+    assert cost.bytes_accessed == (4 * 8 + 8 * 16 + 4 * 16) * 4
+    assert cost.dots == 1
+    assert cost.wire_bytes == 0.0
+
+
+def test_loop_multiplicities_and_trip_scaled_flops():
+    comps, entry = parse_module(LOOP_HLO)
+    mult = _multiplicities(comps, entry)
+    assert mult["main"] == 1.0
+    assert mult["body"] == 7.0
+    assert mult["cond"] == 7.0
+    cost = analyze_hlo(LOOP_HLO, total_devices=1)
+    assert cost.flops == 7 * 2 * (4 * 8) * 8
+
+
+def test_collective_program_ring_wire_bytes():
+    cost = analyze_hlo(COLL_HLO, total_devices=1)
+    # replica_groups={{0,1,2,3}} overrides total_devices: n = 4
+    result_bytes = 256 * 4
+    assert cost.wire_bytes == pytest.approx(2 * result_bytes * 3 / 4)
+    (key, agg), = cost.collectives.items()
+    assert key == "all-reduce@g4"
+    assert agg["count"] == 1.0
+    assert agg["wire_bytes"] == pytest.approx(1536.0)
+    # the reduction lambda is inlined — its add contributes no bytes
+    assert "add" not in {k.split("@")[0] for k in cost.collectives}
+
+
+def test_collective_without_groups_uses_total_devices():
+    hlo = """\
+ENTRY %main (x: f32[100]) -> f32[100] {
+  %x = f32[100]{0} parameter(0)
+  ROOT %cp = f32[100]{0} collective-permute(%x), source_target_pairs={{0,1}}
+}
+"""
+    cost = analyze_hlo(hlo, total_devices=8)
+    assert cost.wire_bytes == 400.0     # permute moves the full buffer
+
+
+def test_no_entry_is_noted_not_crashed():
+    cost = analyze_hlo("HloModule empty\n", total_devices=4)
+    assert cost.flops == 0.0
+    assert cost.notes == ["no ENTRY computation found"]
+
+
+def test_wire_byte_model_all_kinds():
+    b, n = 1000, 4
+    assert _wire_bytes("all-gather", b, n) == pytest.approx(750.0)
+    assert _wire_bytes("all-reduce", b, n) == pytest.approx(1500.0)
+    assert _wire_bytes("reduce-scatter", b, n) == pytest.approx(3000.0)
+    assert _wire_bytes("all-to-all", b, n) == pytest.approx(750.0)
+    assert _wire_bytes("collective-permute", b, n) == 1000.0
+    for kind in ("all-gather", "all-reduce", "reduce-scatter",
+                 "all-to-all", "collective-permute"):
+        assert _wire_bytes(kind, b, 1) == 0.0
+
+
+def test_hlo_cost_to_dict_round_trips_fields():
+    d = analyze_hlo(DOT_HLO, total_devices=1).to_dict()
+    assert set(d) == {"flops", "bytes_accessed", "wire_bytes",
+                      "collectives", "dots"}
+    assert d["flops"] == 1024.0
+
+
+# ------------------------------ roofline ---------------------------------------
+def test_parse_collectives_explicit_and_iota_groups():
+    hlo = """\
+  %ag = f32[128,256]{1,0} all-gather-start(%x), replica_groups=[2,4]<=[8], dimensions={0}
+  %ar = f32[64]{0} all-reduce(%y), replica_groups={{0,1}}, to_apply=%add
+"""
+    ops = parse_collectives(hlo, total_devices=16)
+    assert [(o.op, o.group_size) for o in ops] == [
+        ("all-gather", 4), ("all-reduce", 2)]
+    assert ops[0].result_bytes == 128 * 256 * 4
+    assert ops[0].wire_bytes == pytest.approx(128 * 256 * 4 * 3 / 4)
+    assert ops[1].wire_bytes == pytest.approx(2 * 64 * 4 * 1 / 2)
+
+
+def test_collective_summary_aggregates_by_kind():
+    ops = [CollectiveOp("all-reduce", 1000, 4),
+           CollectiveOp("all-reduce", 1000, 4),
+           CollectiveOp("all-gather", 400, 2)]
+    s = collective_summary(ops)
+    assert s["all-reduce"]["count"] == 2
+    assert s["all-reduce"]["wire_bytes"] == pytest.approx(3000.0)
+    assert s["all-gather"]["result_bytes"] == 400
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(flops_per_device=roofline.PEAK_FLOPS,       # 1 s compute
+                 bytes_per_device=0.5 * roofline.HBM_BW,     # 0.5 s memory
+                 wire_bytes_per_device=2.0 * roofline.ICI_BW,  # 2 s wire
+                 model_flops_global=roofline.PEAK_FLOPS / 2,
+                 num_chips=1)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.collective_s == pytest.approx(2.0)
+    assert r.dominant == "collective"
+    assert r.bound_s == pytest.approx(2.0)
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+    d = r.to_dict()
+    assert d["dominant"] == "collective"
+    assert d["bytes_per_device"] == pytest.approx(0.5 * roofline.HBM_BW)
+
+
+def test_roofline_zero_flops_ratio_guard():
+    r = Roofline(flops_per_device=0.0, bytes_per_device=1.0,
+                 wire_bytes_per_device=0.0, model_flops_global=1e12)
+    assert r.useful_flops_ratio == 0.0
+
+
+def test_model_flops_per_shape_kind():
+    class Cfg:
+        def active_param_count(self):
+            return 100
+        def param_count(self):
+            return 400
+
+    class Shape:
+        def __init__(self, kind):
+            self.kind = kind
+            self.global_batch = 8
+            self.seq_len = 32
+
+    cfg = Cfg()
+    assert model_flops(cfg, Shape("train")) == 6.0 * 100 * 8 * 32
+    assert model_flops(cfg, Shape("prefill")) == 2.0 * 100 * 8 * 32
+    assert model_flops(cfg, Shape("decode")) == 2.0 * 100 * 8
+    assert model_flops(cfg, Shape("train"), active=False) == 6.0 * 400 * 8 * 32
+
+
+def test_fmt_seconds_units():
+    assert fmt_seconds(2.5).strip() == "2.50s"
+    assert fmt_seconds(3.2e-3).strip() == "3.20ms"
+    assert fmt_seconds(4.5e-6).strip() == "4.50us"

@@ -90,44 +90,65 @@ def test_qsgd_codes_fit_int8():
 
 # -- kernel vs core.compression parity -------------------------------------------
 from repro.core import compression
+from repro.kernels.qsgd.ops import single_bucket_regime
 
 
-@pytest.mark.parametrize("size", [100, 128])
+def test_single_bucket_regime_predicate():
+    """The regime boundary, pinned: the kernel (one global norm, LANE-padded
+    uniform draws) and the wire codec (per-bucket norms) coincide exactly
+    when one bucket spans the whole LANE-padded tensor."""
+    assert single_bucket_regime(100, bucket_size=128)
+    assert single_bucket_regime(128, bucket_size=128)
+    assert single_bucket_regime(129, bucket_size=256)     # pads to (2, 128)
+    assert single_bucket_regime(1000, bucket_size=1024)
+    assert not single_bucket_regime(129, bucket_size=128)  # two buckets
+    assert not single_bucket_regime(512, bucket_size=128)
+    assert not single_bucket_regime(100, bucket_size=256)  # pad 128 != 256
+    assert not single_bucket_regime(1025, bucket_size=1024)
+
+
+@pytest.mark.parametrize("size,bucket_size", [
+    (100, 128), (128, 128), (129, 256), (1000, 1024),
+])
 @pytest.mark.parametrize("levels", [16, 64, 127])
-def test_qsgd_kernel_matches_compression_roundtrip(size, levels):
-    """The Pallas qsgd op and the swarm wire codec
-    (``compression.roundtrip("qsgd", ...)``) share scale/clip semantics:
-    |x|/norm * levels, floor + stochastic carry from the same
-    ``uniform(key, (R, 128))`` draw, signed magnitudes, decode q/levels*norm.
-    They coincide whenever one compression bucket spans the whole padded
-    tensor — size <= bucket_size == LANE(128), so both pad to the same
-    (1, 128) grid, draw identical uniforms, and use the same (global ==
-    per-bucket) norm.  Tolerance: the two compute the norm with different
+def test_qsgd_kernel_matches_compression_roundtrip(size, bucket_size, levels):
+    """Single-bucket regime (``single_bucket_regime`` True): the Pallas qsgd
+    op and the swarm wire codec share scale/clip semantics — |x|/norm *
+    levels, floor + stochastic carry from the same uniform draws (threefry
+    bits depend only on the total padded count, so the kernel's (R, 128)
+    draw IS the codec's (1, R*128) draw), signed magnitudes, decode
+    q/levels*norm.  Tolerance: the two compute the norm with different
     reduction shapes, so decoded floats agree to ~1 ulp of norm/levels
     (atol 1e-6 * norm), not bit-for-bit."""
+    assert single_bucket_regime(size, bucket_size=bucket_size)
     key = jax.random.PRNGKey(size + levels)
     x = jax.random.normal(jax.random.PRNGKey(0), (size,)) * 2
     kern = qsgd_roundtrip(key, x, levels=levels, interpret=True)
     wire = compression.roundtrip("qsgd", key, x, levels=levels,
-                                 bucket_size=128)
+                                 bucket_size=bucket_size)
     norm = float(jnp.linalg.norm(x))
     np.testing.assert_allclose(np.asarray(kern), np.asarray(wire),
                                atol=1e-6 * norm, rtol=0)
 
 
-def test_qsgd_kernel_vs_compression_bucketed_divergence_bounded():
-    """Beyond one bucket the two INTENTIONALLY diverge — the kernel
-    normalizes by the global norm, the wire codec per 128-element bucket
-    (tighter scale per bucket) — but both stay unbiased quantizations of
-    the same tensor, so each is within the QSGD error bound
-    sqrt(d)/levels * ||x|| of the input (and hence within 2 bounds of each
-    other)."""
-    levels, size = 64, 512
+@pytest.mark.parametrize("size,bucket_size", [
+    (512, 128), (129, 128), (100, 256), (2000, 1024),
+])
+def test_qsgd_kernel_vs_compression_bucketed_divergence_bounded(size,
+                                                                bucket_size):
+    """Bucketed regime (``single_bucket_regime`` False): the two
+    INTENTIONALLY diverge — the kernel normalizes by the global norm, the
+    wire codec per bucket (tighter scale per bucket) — but both stay
+    unbiased quantizations of the same tensor, so each is within the QSGD
+    error bound sqrt(d)/levels * ||x|| of the input (and hence within 2
+    bounds of each other)."""
+    assert not single_bucket_regime(size, bucket_size=bucket_size)
+    levels = 64
     key = jax.random.PRNGKey(3)
     x = jax.random.normal(jax.random.PRNGKey(1), (size,))
     kern = qsgd_roundtrip(key, x, levels=levels, interpret=True)
     wire = compression.roundtrip("qsgd", key, x, levels=levels,
-                                 bucket_size=128)
+                                 bucket_size=bucket_size)
     bound = np.sqrt(size) / levels * float(jnp.linalg.norm(x))
     assert float(jnp.linalg.norm(kern - x)) <= bound
     assert float(jnp.linalg.norm(wire - x)) <= bound

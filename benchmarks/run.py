@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   §5.5 derailment        no-off frontier + attack economics
   §3.3 round_fused       fused Pallas round path vs per-op jnp, rounds/s
   (g)  roofline          per arch x shape terms from the dry-run artifacts
+  (g)  campaign_scaling  mesh-sharded campaign weak scaling (lanes/s vs
+                         the single-device engine, fake-device host mesh)
 """
 from __future__ import annotations
 
@@ -34,6 +36,7 @@ MODULES = [
     "bench_derailment",
     "bench_round_fused",
     "bench_roofline",
+    "bench_campaign_scaling",
 ]
 
 

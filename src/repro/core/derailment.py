@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import topology, unextractable
+from repro.core.placement import MeshPlan
 from repro.core.scenarios import Regime, SweepGrid
 from repro.core.swarm import (
     BEHAVIOUR_CODES,
@@ -178,6 +179,7 @@ class SweepResult:
     n_programs: int
     n_runs: int
     wall_s: float
+    n_devices: int = 1          # devices the sweep's mesh plan spanned
 
     @property
     def runs_per_s(self) -> float:
@@ -312,7 +314,8 @@ def _sweep_lane(n_total: int, n_honest: int, count: int, code: int,
 
 def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
           grid: SweepGrid, *, rounds: Optional[int] = None,
-          fast_compile: Optional[bool] = None) -> SweepResult:
+          fast_compile: Optional[bool] = None,
+          plan: Optional[MeshPlan] = None) -> SweepResult:
     """Measure a whole §5.5 phase diagram as **one** compiled device program.
 
     Every (regime × topology × attacker count × scale × seed) cell is a
@@ -342,6 +345,13 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
     pipelines in this repo all are).  Each result lane reproduces the
     single-point :func:`simulate_derailment` run for the same parameters —
     property-tested in ``tests/test_campaign.py``.
+
+    ``plan`` (a :class:`~repro.core.placement.MeshPlan`, e.g.
+    ``MeshPlan.from_grid(grid)``) shards the sweep's lanes across the
+    plan's mesh — the whole phase diagram still compiles to ONE program,
+    now spanning ``plan.n_devices`` devices.  Lane sharding is bit-exact
+    for centralized grids (allclose on topology-axis grids — the gossip
+    matmul's reductions reorder under a mesh; see ``core/placement.py``).
     """
     rounds = grid.rounds if rounds is None else rounds
     if fast_compile is None:
@@ -459,7 +469,7 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
         aggregator=agg_specs if len(agg_specs) > 1 else agg_specs[0][0],
         agg_kwargs=agg_specs[0][1] if len(agg_specs) == 1 else None,
         verify=any(reg.verification is not None for reg in grid.regimes),
-        eval_fn=eval_fn, fast_compile=fast_compile)
+        eval_fn=eval_fn, fast_compile=fast_compile, plan=plan)
     slashed = np.asarray(state.slashed)
     final = np.asarray(final)               # (R,) — or (R, 2) with custody:
     if has_custody:                         # [honest, reconstruct-attack]
@@ -501,7 +511,8 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
                         else float("nan")),
     ) for j, reg, topo, red, cfrac, count, scale, seed in results_raw]
     return SweepResult(grid=grid, results=results, n_programs=1,
-                       n_runs=len(lanes), wall_s=time.perf_counter() - t0)
+                       n_runs=len(lanes), wall_s=time.perf_counter() - t0,
+                       n_devices=plan.n_devices if plan is not None else 1)
 
 
 # -- economics -------------------------------------------------------------------

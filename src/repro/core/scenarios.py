@@ -414,6 +414,14 @@ class SweepGrid:
                 * max(1, len(self.redundancies))
                 * max(1, len(self.coalition_fractions)))
 
+    @property
+    def n_lanes(self) -> int:
+        """Total campaign lanes ``derailment.sweep`` builds for this grid:
+        every measured point plus the shared honest-baseline lanes (one per
+        (topology, seed)).  This is the count a
+        :class:`~repro.core.placement.MeshPlan` must shard evenly."""
+        return self.n_points + max(1, len(self.topologies)) * len(self.seeds)
+
 
 SWEEP_GRIDS: Dict[str, SweepGrid] = {}
 
@@ -570,6 +578,12 @@ class ServingGrid:
         return (len(self.loads) * len(self.churn_rates)
                 * len(self.redundancies) * len(self.coalition_fractions)
                 * len(self.seeds))
+
+    @property
+    def n_lanes(self) -> int:
+        """Serving sweeps have no baseline lanes: lanes == points.  Named
+        ``n_lanes`` so ``MeshPlan.from_grid`` works on either grid kind."""
+        return self.n_points
 
 
 SERVING_GRIDS: Dict[str, ServingGrid] = {}

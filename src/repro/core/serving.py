@@ -57,6 +57,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.placement import MeshPlan
+
 Array = jax.Array
 
 _FAR = np.iinfo(np.int32).max
@@ -470,12 +472,22 @@ class ServingEngine:
     (load × churn × redundancy × coalition) grid.  ``prompts`` given at
     construction are the default workload; ``run``/``run_many`` accept a
     same-shaped override without retracing (prompts are a traced program
-    argument)."""
+    argument).
 
-    def __init__(self, model, cfg: ServingConfig, prompts: Array):
+    ``plan`` (a :class:`~repro.core.placement.MeshPlan`) shards
+    ``run_many``'s lane axis over the plan's mesh (bit-exact — lanes are
+    embarrassingly parallel) and the shared params over its within-lane
+    axes (allclose); single-lane ``run`` has no lane axis to shard and
+    ignores it.  Lowering failures under a plan re-raise through
+    ``plan.reraise_lowering`` (the ``compat.collectives_emulated()``
+    gate)."""
+
+    def __init__(self, model, cfg: ServingConfig, prompts: Array,
+                 plan: Optional[MeshPlan] = None):
         self.model = model
         self.cfg = cfg
         self.prompts = jnp.asarray(prompts, jnp.int32)
+        self.plan = plan
         self._programs: Dict[Tuple[bool, bool], Callable] = {}
 
     def _program(self, has_custody: bool, vmapped: bool) -> Callable:
@@ -491,8 +503,13 @@ class ServingEngine:
                 return jax.lax.scan(body, init_state(lane),
                                     jnp.arange(self.cfg.steps))
 
-            fn = (jax.vmap(run, in_axes=(None, None, 0)) if vmapped
-                  else run)
+            if vmapped and self.plan is not None:
+                fn = jax.vmap(run, in_axes=(None, None, 0),
+                              spmd_axis_name=self.plan.lanes_axis)
+            elif vmapped:
+                fn = jax.vmap(run, in_axes=(None, None, 0))
+            else:
+                fn = run
             self._programs[key] = jax.jit(fn)
         return self._programs[key]
 
@@ -532,7 +549,16 @@ class ServingEngine:
         p = self._check(lanes, prompts)
         fn = self._program(lanes.custody is not None, True)
         t0 = time.perf_counter()
-        state, recs = jax.block_until_ready(fn(params, p, lanes))
+        if self.plan is not None:
+            lanes = self.plan.place_lanes(lanes)
+            params = self.plan.place_params(params)
+            with self.plan.mesh:
+                try:
+                    state, recs = jax.block_until_ready(fn(params, p, lanes))
+                except Exception as e:
+                    self.plan.reraise_lowering(e)
+        else:
+            state, recs = jax.block_until_ready(fn(params, p, lanes))
         wall = time.perf_counter() - t0
         n = int(lanes.arrivals.shape[0])
         out = []
@@ -668,6 +694,7 @@ class ServingResult:
     n_runs: int
     wall_s: float
     tokens_total: int
+    n_devices: int = 1        # devices the sweep's mesh plan spanned
 
     @property
     def runs_per_s(self) -> float:
@@ -713,8 +740,8 @@ class ServingResult:
         return "\n".join(lines)
 
 
-def sweep(model, params, grid, *, prompts: Optional[Array] = None
-          ) -> ServingResult:
+def sweep(model, params, grid, *, prompts: Optional[Array] = None,
+          plan: Optional[MeshPlan] = None) -> ServingResult:
     """Measure a whole serving phase diagram — every (load × churn ×
     redundancy × coalition × seed) cell of a ``scenarios.ServingGrid`` —
     as **one** compiled device program, mirroring ``derailment.sweep``.
@@ -725,6 +752,11 @@ def sweep(model, params, grid, *, prompts: Optional[Array] = None
     program are shared
     by every cell.  Each lane reproduces the single-run
     :meth:`ServingEngine.run` for the same parameters (one scan, vmapped).
+
+    ``plan`` (e.g. ``MeshPlan.from_grid(grid)``) shards the lane axis over
+    the plan's mesh — bit-exact (pinned in
+    ``tests/test_campaign_sharded.py``) — and the shared model params over
+    its within-lane axes (allclose).
     """
     from repro.core.unextractable import assign_matrix
 
@@ -743,7 +775,7 @@ def sweep(model, params, grid, *, prompts: Optional[Array] = None
                            max_fraction=grid.max_fraction)
         for red in grid.redundancies}
 
-    engine = ServingEngine(model, cfg, prompts)
+    engine = ServingEngine(model, cfg, prompts, plan=plan)
     lanes, metas = [], []
     for load in grid.loads:
         for churn in grid.churn_rates:
@@ -784,4 +816,5 @@ def sweep(model, params, grid, *, prompts: Optional[Array] = None
             final_coverage=float(res.coverage[-1])))
     return ServingResult(grid=grid, cells=cells, n_programs=1,
                          n_runs=len(lanes), wall_s=wall,
-                         tokens_total=sum(c.tokens_served for c in cells))
+                         tokens_total=sum(c.tokens_served for c in cells),
+                         n_devices=plan.n_devices if plan is not None else 1)

@@ -95,6 +95,7 @@ import numpy as np
 
 from repro.core import aggregation, compression
 from repro.core.ledger import Ledger
+from repro.core.placement import MeshPlan
 from repro.core.unextractable import (
     CustodyConfig,
     assign_matrix,
@@ -669,7 +670,8 @@ def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
                  verify: bool = False, eval_fn: Optional[Callable] = None,
                  batched_data_fn: Optional[Callable] = None,
                  fast_compile: bool = False, mixing_schedule: str = "cycle",
-                 fused: Optional[bool] = None):
+                 fused: Optional[bool] = None,
+                 plan: Optional[MeshPlan] = None):
     """Run a whole campaign — ``vmap`` over the leading run axis of ``lanes``
     of the scanned round — as **one** jit-compiled device program.
 
@@ -704,9 +706,23 @@ def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
     where ``extracted`` is the loss of the model reassembled from exactly
     the shards the lane's coalition holds.
 
+    ``plan`` (a :class:`~repro.core.placement.MeshPlan`) makes device
+    placement explicit: the stacked lane leaves are sharded over the plan's
+    ``lanes`` mesh axis (bit-exact for centralized/fused/serving rounds —
+    lanes are embarrassingly parallel; the decentralized mixing matmul is
+    allclose only, see ``core/placement.py``), shared params over its
+    within-lane ``data``/``model`` axes (allclose), and the one program
+    runs under the plan's mesh with ``spmd_axis_name`` on the campaign
+    vmap.  Lowering failures under a plan re-raise through
+    ``plan.reraise_lowering`` — a clear error naming
+    ``compat.collectives_emulated()`` on old jax instead of an XLA abort.
+
     Returns ``(final SwarmState, RoundRecord, final losses)`` with a leading
     run axis on every output leaf (RoundRecord leaves are (R, T, ...)).
     """
+    if plan is not None:
+        params0 = plan.place_params(params0)
+        lanes = plan.place_lanes(lanes)
     n = int(lanes.codes.shape[-1])
     decentralized = lanes.mixing is not None
     has_custody = lanes.custody is not None
@@ -744,14 +760,27 @@ def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
                 return jnp.stack([honest, extracted])
         return scan_rounds(round_fn, lane, state0, rounds, batch_fn, efn)
 
-    fn = jax.jit(jax.vmap(one_run))
-    if fast_compile:
+    vmapped = (jax.vmap(one_run) if plan is None
+               else jax.vmap(one_run, spmd_axis_name=plan.lanes_axis))
+    fn = jax.jit(vmapped)
+
+    def run_program():
+        if fast_compile:
+            try:
+                return fn.lower(lanes).compile(
+                    compiler_options={
+                        "xla_backend_optimization_level": "0"})(lanes)
+            except Exception:
+                pass
+        return fn(lanes)
+
+    if plan is None:
+        return run_program()
+    with plan.mesh:
         try:
-            return fn.lower(lanes).compile(
-                compiler_options={"xla_backend_optimization_level": "0"})(lanes)
-        except Exception:
-            pass
-    return fn(lanes)
+            return run_program()
+        except Exception as e:
+            plan.reraise_lowering(e)
 
 
 def history_from_records(recs: RoundRecord, node_ids: Sequence[str], *,

@@ -19,6 +19,7 @@ from __future__ import annotations
 from typing import Dict, Optional
 
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
 
@@ -26,6 +27,10 @@ SINGLE_POD_SHAPE = (16, 16)
 SINGLE_POD_AXES = ("data", "model")
 MULTI_POD_SHAPE = (2, 16, 16)
 MULTI_POD_AXES = ("pod", "data", "model")
+# the campaign mesh (core/placement.MeshPlan): lanes = the embarrassingly
+# parallel run axis of a sweep; data/model = the within-lane axes the
+# models/sharding.py rules partition over
+CAMPAIGN_AXES = ("lanes", "data", "model")
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -34,10 +39,47 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh() -> Mesh:
-    """1×1 mesh over the container's real device(s) — smoke tests/examples."""
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Mesh over the container's real device(s) — smoke tests/examples.
+
+    Zero-arg: ``(n, 1)`` over ``("data", "model")``, as before.  ``model``
+    splits a model axis off the host devices — ``(n // model, model)`` —
+    so fake-device tests (``--xla_force_host_platform_device_count=8``)
+    can build ``(4, 2)``-style meshes; it must divide the device count."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), SINGLE_POD_AXES)
+    if model < 1 or n % model:
+        raise ValueError(
+            f"model-axis factor {model} must be >= 1 and divide the "
+            f"{n} available device(s)")
+    return jax.make_mesh((n // model, model), SINGLE_POD_AXES)
+
+
+def make_campaign_mesh(lanes: Optional[int] = None, *, data: int = 1,
+                       model: int = 1) -> Mesh:
+    """The ``("lanes", "data", "model")`` mesh for a MeshPlan, over the
+    first ``lanes * data * model`` devices (a campaign may deliberately use
+    a divisor of the host's devices so its lane count shards evenly —
+    ``jax.make_mesh`` would insist on all of them).  Zero-arg: every
+    device on the lane axis."""
+    devs = jax.devices()
+    if data < 1 or model < 1:
+        raise ValueError(f"data/model factors must be >= 1, got "
+                         f"data={data} model={model}")
+    if lanes is None:
+        if len(devs) % (data * model):
+            raise ValueError(
+                f"data={data} x model={model} must divide the "
+                f"{len(devs)} available device(s) when lanes is unset")
+        lanes = len(devs) // (data * model)
+    if lanes < 1:
+        raise ValueError(f"lane-axis extent must be >= 1, got {lanes}")
+    need = lanes * data * model
+    if need > len(devs):
+        raise ValueError(
+            f"campaign mesh ({lanes}, {data}, {model}) needs {need} "
+            f"devices, have {len(devs)}")
+    arr = np.asarray(devs[:need]).reshape(lanes, data, model)
+    return Mesh(arr, CAMPAIGN_AXES)
 
 
 def axis_sizes(mesh: Mesh) -> Dict[str, int]:

@@ -162,8 +162,11 @@ def param_pspecs(shapes_tree, cfg: ModelConfig, sizes: Dict[str, int],
 
 def batch_pspecs(batch_tree, sizes: Dict[str, int], data_axis: str = "data",
                  extra_batch_axes: tuple = ()):
-    """Shard the leading batch dim over data (+pod) axes when divisible."""
-    axes = tuple(a for a in (*extra_batch_axes, data_axis))
+    """Shard the leading batch dim over data (+pod) axes when divisible.
+    ``extra_batch_axes`` may name ``data_axis`` itself (callers that build
+    the full axis tuple up front) — deduped, since a PartitionSpec must
+    not mention a mesh axis twice."""
+    axes = tuple(dict.fromkeys((*extra_batch_axes, data_axis)))
     total = 1
     for a in axes:
         total *= sizes[a]
@@ -185,8 +188,9 @@ def batch_pspecs(batch_tree, sizes: Dict[str, int], data_axis: str = "data",
 def cache_pspecs(cache_tree, cfg: ModelConfig, sizes: Dict[str, int],
                  data_axis: str = "data", model_axis: str = "model",
                  extra_batch_axes: tuple = ()):
-    """KV caches / recurrent state sharding for decode."""
-    baxes = tuple(a for a in (*extra_batch_axes, data_axis))
+    """KV caches / recurrent state sharding for decode.  ``extra_batch_axes``
+    is deduped against ``data_axis`` like :func:`batch_pspecs`."""
+    baxes = tuple(dict.fromkeys((*extra_batch_axes, data_axis)))
     btotal = 1
     for a in baxes:
         btotal *= sizes[a]

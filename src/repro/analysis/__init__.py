@@ -1,0 +1,29 @@
+"""protolint — static analysis over the engine's *programs*, not its runs.
+
+The paper's protocol setting (§4 verification, §5.5 no-off) needs program
+properties that a participant can audit without trusting the operator.  The
+test suite proves those properties dynamically; this package proves the
+static half before anything runs, with three analyzers over three artifact
+layers:
+
+- :mod:`repro.analysis.jaxpr_audit` — walks the ClosedJaxprs of the real
+  engine entry points (:mod:`repro.analysis.programs`) enforcing JX001…:
+  no f64 on the hot path, no weak-typed constants materialized into
+  buffers, no host callbacks, no dynamic shapes, declared donation
+  actually aliased, collectives only on declared mesh axes, and a
+  retrace fingerprint stable across churn/load lane variants — the
+  no-recompile contract as a static property.
+- :mod:`repro.analysis.pallas_check` — symbolically evaluates every
+  kernel's BlockSpec index maps over its full grid (PK001…): tiles cover
+  the output, never exceed the padded bounds, the VMEM tile footprint
+  stays under budget (cross-checked against ``launch/roofline.py``), and
+  tiled feature dims honor the lane-multiple padding contract.
+- :mod:`repro.analysis.tracer_lint` — an AST lint over ``src/`` (PL001…)
+  for the tracer hazards jaxprs can't show: python control flow on traced
+  values, host escapes, ``np.`` calls, unordered dict iteration in
+  pytree-order-sensitive code, ``lru_cache`` holding live arrays.
+
+CLI: ``python -m repro.analysis --json`` (see :mod:`repro.analysis.__main__`);
+rule catalog and suppression policy in ``docs/analysis.md``.
+"""
+from repro.analysis.report import RULES, Report, Violation  # noqa: F401

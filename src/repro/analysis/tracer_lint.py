@@ -1,0 +1,302 @@
+"""PL-rules: an AST lint for tracer hazards jaxprs cannot show.
+
+A jaxpr only exists after tracing succeeded, so the jaxpr auditor is blind
+to the class of bug where tracing itself goes wrong — python ``if`` on a
+tracer raises at the worst possible lane, ``np.`` silently constant-folds
+a value that should have been traced, dict iteration reorders a pytree
+between two programs that must agree leaf-for-leaf, ``lru_cache`` pins
+device buffers and retraces per array identity.  Those live in the source,
+so this analyzer walks the AST of every file under ``src/``.
+
+Traced-function detection is necessarily heuristic; it is tuned to this
+repo's idioms and errs toward *fewer* false positives (the jaxpr auditor
+backstops what this misses):
+
+- a function is **traced** when (a) it is decorated with a jax transform,
+  (b) its *name* is passed to a jax transform (``jax.jit(f)``,
+  ``lax.scan(body, …)``, ``pl.pallas_call(kern, …)``) — including through
+  a tracked ``functools.partial`` assignment — or (c) it is *nested*
+  inside another function and its body touches ``jnp.``/``lax.``/
+  ``jax.random`` (the repo's round/step closures are all built this way);
+- anything defined inside a traced function is traced too.
+
+Suppression: ``# noqa`` or ``# noqa: PL004`` on the offending line (policy
+in docs/analysis.md); suppressed hits are still reported, as "suppressed".
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.report import Violation
+
+#: callables that trace their function-valued arguments
+TRANSFORMS = {
+    "jit", "vmap", "pmap", "grad", "value_and_grad", "scan", "cond",
+    "while_loop", "switch", "fori_loop", "associative_scan", "map",
+    "checkpoint", "remat", "custom_vjp", "custom_jvp", "pallas_call",
+    "named_call", "make_jaxpr", "eval_shape",
+}
+#: attribute roots whose calls mean "this expression is traced-valued"
+TRACED_MODULES = {"jnp", "lax"}
+#: np.* helpers that are legitimate *static* host math on shapes/dtypes
+NP_STATIC_SAFE = {
+    "prod", "ceil", "floor", "log2", "sqrt", "dtype", "iinfo", "finfo",
+    "float32", "float64", "int32", "int64", "bool_", "pi", "inf", "nan",
+    "ndarray", "integer", "floating",
+}
+HOST_ESCAPES = {"float", "int", "bool"}
+
+
+def _attr_root(node: ast.AST) -> Optional[str]:
+    """'jnp' for jnp.sum, 'jax' for jax.lax.scan, None for bare names."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _attr_path(node: ast.AST) -> str:
+    """Dotted path of an Attribute/Name chain ('jax.lax.scan')."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_traced_value(node: ast.AST) -> bool:
+    """Does this expression subtree *call into* jnp/lax/jax.random — i.e.
+    is it tracer-valued beyond reasonable doubt?  (Attribute reads like
+    ``x.ndim`` and bare names stay un-flagged: shapes and python values
+    flow through the same source.)"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            path = _attr_path(sub.func)
+            root = path.split(".")[0] if path else None
+            if root in TRACED_MODULES:
+                return True
+            if path.startswith(("jax.numpy.", "jax.lax.", "jax.random.",
+                                "jax.nn.")):
+                return True
+    return False
+
+
+def _is_transform(func: ast.AST) -> bool:
+    path = _attr_path(func)
+    return bool(path) and path.split(".")[-1] in TRANSFORMS
+
+
+class _FileLint(ast.NodeVisitor):
+    """One file's lint pass: two sweeps — mark traced functions, then
+    check their bodies."""
+
+    def __init__(self, tree: ast.Module, rel: str, source: str):
+        self.tree = tree
+        self.rel = rel
+        self.lines = source.splitlines()
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+        self.partial_of: Dict[str, str] = {}   # var name -> wrapped fn name
+        self.traced_names: Set[str] = set()
+        self.hits: List[Violation] = []
+        self.suppressed: List[Violation] = []
+
+    # -- pass 1: which functions are traced ----------------------------------
+    def collect_traced(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                path = _attr_path(node.value.func)
+                if path.split(".")[-1] == "partial" and node.value.args:
+                    inner = node.value.args[0]
+                    if isinstance(inner, ast.Name):
+                        for tgt in node.targets:
+                            if isinstance(tgt, ast.Name):
+                                self.partial_of[tgt.id] = inner.id
+            if isinstance(node, ast.Call) and _is_transform(node.func):
+                for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                    if isinstance(arg, ast.Name):
+                        self.traced_names.add(
+                            self.partial_of.get(arg.id, arg.id))
+                    elif (isinstance(arg, ast.Call)
+                          and _attr_path(arg.func).split(".")[-1] == "partial"
+                          and arg.args and isinstance(arg.args[0], ast.Name)):
+                        self.traced_names.add(arg.args[0].id)
+
+    def _is_traced_fn(self, fn: ast.FunctionDef) -> bool:
+        for dec in fn.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if _is_transform(target):
+                return True
+            # functools.partial(jax.jit, ...) as a decorator
+            if (isinstance(dec, ast.Call)
+                    and _attr_path(dec.func).split(".")[-1] == "partial"
+                    and dec.args and _is_transform(dec.args[0])):
+                return True
+        if fn.name in self.traced_names:
+            return True
+        parent = self.parents.get(fn)
+        if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _is_traced_value(fn):     # nested + touches jnp/lax => traced
+                return True
+            if self._is_traced_fn(parent):
+                return True
+        return False
+
+    # -- pass 2: rules ---------------------------------------------------------
+    def run(self) -> None:
+        self.collect_traced()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.FunctionDef):
+                self._check_lru_cache(node)
+                if self._is_traced_fn(node):
+                    self._check_traced_body(node)
+
+    def _emit(self, code: str, fn_name: str, lineno: int, msg: str) -> None:
+        v = Violation(code, f"{self.rel}::{fn_name}",
+                      f"{self.rel}:{lineno}: {msg}")
+        line = self.lines[lineno - 1] if lineno - 1 < len(self.lines) else ""
+        if "# noqa" in line:
+            tail = line.split("# noqa", 1)[1]
+            if ":" not in tail or code in tail:
+                self.suppressed.append(v)
+                return
+        self.hits.append(v)
+
+    def _walk_own(self, fn: ast.FunctionDef):
+        """fn's body without nested def subtrees — nested functions are
+        traced by inheritance and get their own pass (no double-reports).
+        Lambdas stay in: they never get a pass of their own."""
+        stack = list(ast.iter_child_nodes(fn))
+        while stack:
+            node = stack.pop()
+            yield node
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                stack.extend(ast.iter_child_nodes(node))
+
+    def _check_traced_body(self, fn: ast.FunctionDef) -> None:
+        sorted_wrapped: Set[int] = set()
+        for node in self._walk_own(fn):
+            if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                    and node.func.id == "sorted"):
+                for a in node.args:
+                    sorted_wrapped.add(id(a))
+        for node in self._walk_own(fn):
+            # PL001 — python control flow on a traced test
+            if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                if _is_traced_value(node.test):
+                    kind = {ast.If: "if", ast.While: "while",
+                            ast.IfExp: "conditional expression"}[type(node)]
+                    self._emit("PL001", fn.name, node.lineno,
+                               f"python {kind} on a traced expression in "
+                               f"traced fn '{fn.name}' — use jnp.where/"
+                               "lax.cond/lax.while_loop")
+            if not isinstance(node, ast.Call):
+                continue
+            path = _attr_path(node.func)
+            leaf = path.split(".")[-1] if path else ""
+            # PL002 — host escapes
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in HOST_ESCAPES
+                    and any(_is_traced_value(a) for a in node.args)):
+                self._emit("PL002", fn.name, node.lineno,
+                           f"{node.func.id}() on a traced value in traced "
+                           f"fn '{fn.name}' forces a host sync (fails "
+                           "under jit)")
+            if leaf == "item" and isinstance(node.func, ast.Attribute):
+                self._emit("PL002", fn.name, node.lineno,
+                           f".item() in traced fn '{fn.name}' forces a "
+                           "host sync (fails under jit)")
+            # PL003 — numpy in traced code
+            if (path.startswith("np.") or path == "np"
+                    or path.startswith("numpy.")):
+                attr = path.split(".", 1)[1] if "." in path else ""
+                if attr.split(".")[0] not in NP_STATIC_SAFE:
+                    self._emit("PL003", fn.name, node.lineno,
+                               f"{path}(...) in traced fn '{fn.name}' "
+                               "computes on host — constant-folds (wrong "
+                               "under vmap/scan) or crashes on tracers; "
+                               "use jnp")
+            # PL004 — unordered dict iteration
+            if (leaf in ("items", "values", "keys")
+                    and isinstance(node.func, ast.Attribute)
+                    and not node.args and not node.keywords
+                    and id(node) not in sorted_wrapped):
+                parent = self.parents.get(node)
+                iterated = (
+                    (isinstance(parent, ast.comprehension)
+                     and parent.iter is node)
+                    or (isinstance(parent, ast.For) and parent.iter is node))
+                if iterated:
+                    self._emit("PL004", fn.name, node.lineno,
+                               f".{leaf}() iteration in traced fn "
+                               f"'{fn.name}': dict order decides pytree "
+                               "leaf order here — wrap in sorted(...)")
+
+    def _check_lru_cache(self, fn: ast.FunctionDef) -> None:
+        # PL005 — lru_cache over arrays
+        cached = any(
+            _attr_path(d.func if isinstance(d, ast.Call) else d)
+            .split(".")[-1] in ("lru_cache", "cache")
+            for d in fn.decorator_list)
+        if not cached:
+            return
+        argnames = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            root = _attr_root(node.func)
+            if root in TRACED_MODULES or _attr_path(node.func).startswith(
+                    ("jax.numpy.", "jax.lax.")):
+                used = {a.id for a in node.args if isinstance(a, ast.Name)}
+                hit = used & argnames
+                if hit:
+                    self._emit(
+                        "PL005", fn.name, fn.lineno,
+                        f"lru_cache on '{fn.name}' whose arg(s) "
+                        f"{sorted(hit)} feed jnp directly: caching by "
+                        "array identity pins device buffers and defeats "
+                        "the cache")
+                    return
+        annotated = [a for a in fn.args.args + fn.args.kwonlyargs
+                     if a.annotation is not None
+                     and ("Array" in ast.dump(a.annotation)
+                          or "ndarray" in ast.dump(a.annotation))]
+        if annotated:
+            self._emit("PL005", fn.name, fn.lineno,
+                       f"lru_cache on '{fn.name}' with array-annotated "
+                       f"arg(s) {[a.arg for a in annotated]}")
+
+
+def lint_file(path: Path, root: Path) -> Tuple[List[Violation], List[Violation]]:
+    source = path.read_text()
+    rel = str(path.relative_to(root))
+    lint = _FileLint(ast.parse(source), rel, source)
+    lint.run()
+    return lint.hits, lint.suppressed
+
+
+def lint_tree(src_root) -> Tuple[List[Violation], List[Violation], int]:
+    """Lint every .py under ``src_root`` (the analyzers themselves included
+    — protolint is host-side code and must pass its own rules).  Returns
+    (violations, suppressed, files_scanned)."""
+    root = Path(src_root).resolve()
+    hits: List[Violation] = []
+    suppressed: List[Violation] = []
+    files = sorted(root.rglob("*.py"))
+    for f in files:
+        h, s = lint_file(f, root)
+        hits.extend(h)
+        suppressed.extend(s)
+    return hits, suppressed, len(files)
+
+
+def lint_source(source: str, name: str = "<snippet>") -> List[Violation]:
+    """Lint a source string — the golden-test entry point."""
+    lint = _FileLint(ast.parse(source), name, source)
+    lint.run()
+    return lint.hits

@@ -88,7 +88,8 @@ def _krum_scores(updates: Array, f: int) -> Array:
     n = updates.shape[0]
     d2 = jnp.sum(
         jnp.square(updates[:, None, :] - updates[None, :, :]), axis=-1)
-    d2 = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, d2)  # exclude self
+    d2 = jnp.where(jnp.eye(n, dtype=bool),                # exclude self
+                   jnp.asarray(jnp.inf, d2.dtype), d2)
     k = max(n - f - 2, 1)
     nearest = -jax.lax.top_k(-d2, k)[0]                  # k smallest
     return jnp.sum(nearest, axis=-1)
@@ -157,7 +158,14 @@ def centered_clip(updates: Array, *, clip_tau: float | None = None,
 
 
 def _masked_median(updates: Array, mask: Array) -> Array:
-    return jnp.nanmedian(jnp.where(mask[:, None], updates, jnp.nan), axis=0)
+    # dtype-matched NaN fill and quantile: bare jnp.nan / nanmedian's
+    # internal 0.5 are weak-typed and materialize weak buffers into the
+    # program (analysis JX002).  nanquantile(0.5, method='midpoint') IS
+    # nanmedian — same op, explicit dtype.
+    padded = jnp.where(mask[:, None], updates,
+                       jnp.asarray(jnp.nan, updates.dtype))
+    return jnp.nanquantile(padded, jnp.asarray(0.5, updates.dtype),
+                           axis=0, method="midpoint")
 
 
 def masked_mean(updates: Array, mask: Array) -> Array:
@@ -173,7 +181,8 @@ def masked_trimmed_mean(updates: Array, mask: Array, *, trim: int = 1) -> Array:
     n = updates.shape[0]
     k = jnp.sum(mask.astype(jnp.int32))
     t = jnp.minimum(trim, (k - 1) // 2)
-    s = jnp.sort(jnp.where(mask[:, None], updates, jnp.inf), axis=0)
+    s = jnp.sort(jnp.where(mask[:, None], updates,
+                           jnp.asarray(jnp.inf, updates.dtype)), axis=0)
     ranks = jnp.arange(n)[:, None]
     keep = (ranks >= t) & (ranks < k - t)
     total = jnp.sum(jnp.where(keep, s, 0.0), axis=0)
@@ -190,7 +199,7 @@ def _krum_scores_from_d2(d2: Array, mask: Array, f: int) -> Array:
     n = d2.shape[0]
     k_act = jnp.sum(mask.astype(jnp.int32))
     pair_ok = mask[:, None] & mask[None, :] & ~jnp.eye(n, dtype=bool)
-    d2 = jnp.where(pair_ok, d2, jnp.inf)
+    d2 = jnp.where(pair_ok, d2, jnp.asarray(jnp.inf, d2.dtype))
     k_near = jnp.maximum(k_act - f - 2, 1)
     s = jnp.sort(d2, axis=-1)                            # ascending per row
     nearest = jnp.where(jnp.arange(n)[None, :] < k_near, s, 0.0)
@@ -199,7 +208,8 @@ def _krum_scores_from_d2(d2: Array, mask: Array, f: int) -> Array:
     # masked rows; cap kept scores below +inf so argmin/argsort can never
     # prefer a masked-out (slashed/inactive) row over a kept one.
     big = jnp.asarray(jnp.finfo(jnp.float32).max, scores.dtype)
-    return jnp.where(mask, jnp.minimum(scores, big), jnp.inf)
+    return jnp.where(mask, jnp.minimum(scores, big),
+                     jnp.asarray(jnp.inf, scores.dtype))
 
 
 def _masked_krum_scores(updates: Array, mask: Array, f: int) -> Array:
@@ -242,7 +252,10 @@ def masked_centered_clip(updates: Array, mask: Array, *, clip_tau: float | None 
     def body(v, _):
         diff = updates - v[None]
         norm = jnp.linalg.norm(diff, axis=-1, keepdims=True)
-        tau = (jnp.nanmedian(jnp.where(mask[:, None], norm, jnp.nan))
+        tau = (jnp.nanquantile(
+                   jnp.where(mask[:, None], norm,
+                             jnp.asarray(jnp.nan, norm.dtype)),
+                   jnp.asarray(0.5, norm.dtype), method="midpoint")
                if clip_tau is None else clip_tau)
         scale = jnp.minimum(1.0, tau / jnp.maximum(norm, 1e-12))
         step = jnp.sum(diff * scale * mask[:, None].astype(jnp.float32), axis=0) / k

@@ -26,7 +26,7 @@ from __future__ import annotations
 import functools
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -312,53 +312,42 @@ def _sweep_lane(n_total: int, n_honest: int, count: int, code: int,
     )
 
 
-def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
-          grid: SweepGrid, *, rounds: Optional[int] = None,
-          fast_compile: Optional[bool] = None,
-          plan: Optional[MeshPlan] = None) -> SweepResult:
-    """Measure a whole §5.5 phase diagram as **one** compiled device program.
+@dataclass
+class SweepProgramSpec:
+    """Everything :func:`sweep` feeds the campaign engine, built without
+    running anything: the lane list (host arrays — ``swarm.stack_lanes``
+    moves them to device once), per-lane metadata, the shared aggregator
+    set, and the post-processing helpers.  Split out of :func:`sweep` so
+    ``analysis.jaxpr_audit`` traces the *real* sweep program — the same
+    lanes, the same multi-aggregator round — instead of a reimplementation
+    that could drift."""
+    lanes: List[LaneParams]
+    metas: List[tuple]
+    agg_specs: List[Tuple[str, Dict]]
+    verify: bool
+    has_custody: bool
+    n_honest: int
+    n_total: int
+    coalition_coverage: Callable[[int, float, int], float]
 
-    Every (regime × topology × attacker count × scale × seed) cell is a
-    lane of a single campaign: verification differences ride in the traced
-    ``p_check``/``tolerance`` lanes (``p_check=0`` disables audits),
-    aggregator differences in the ``agg_id`` lane of a multi-aggregator
-    round (the gradient / corruption / audit machinery — the bulk of the
-    compile cost — is shared), topology differences in the traced
-    ``mixing`` lane of the decentralized round (``grid.topologies``
-    non-empty — every lane then runs per-node replicas + neighborhood
-    aggregation + gossip mixing), custody differences in the traced
-    ``custody``/``coalition`` lanes (``grid.redundancies`` /
-    ``grid.coalition_fractions`` non-empty — every lane then records the
-    live coverage frontier and evals the reconstruct attack, feeding
-    :meth:`SweepResult.extractability_table`), and the honest baseline
-    rides along as extra ``count=0`` lanes, computed once per (topology,
-    seed) instead of once per point.
+    @property
+    def aggregator(self):
+        """The ``aggregator`` argument for ``run_campaign`` — the full
+        (name, kwargs) set when several regimes share the program."""
+        return (self.agg_specs if len(self.agg_specs) > 1
+                else self.agg_specs[0][0])
 
-    ``fast_compile=None`` decides automatically: tiny models (≤ 4096
-    params) are compile-bound, so they get XLA's fast/low-optimization
-    backend (~3x faster compiles, bit-identical here); larger models are
-    runtime-bound and keep full optimization — the unfused fast path costs
-    far more in memory traffic than it saves in compilation (see
-    :func:`~repro.core.swarm.run_campaign`).
+    @property
+    def agg_kwargs(self) -> Optional[Dict]:
+        return self.agg_specs[0][1] if len(self.agg_specs) == 1 else None
 
-    ``data_fn`` and ``eval_fn`` must be jax-traceable (the fold_in-keyed
-    pipelines in this repo all are).  Each result lane reproduces the
-    single-point :func:`simulate_derailment` run for the same parameters —
-    property-tested in ``tests/test_campaign.py``.
 
-    ``plan`` (a :class:`~repro.core.placement.MeshPlan`, e.g.
-    ``MeshPlan.from_grid(grid)``) shards the sweep's lanes across the
-    plan's mesh — the whole phase diagram still compiles to ONE program,
-    now spanning ``plan.n_devices`` devices.  Lane sharding is bit-exact
-    for centralized grids (allclose on topology-axis grids — the gossip
-    matmul's reductions reorder under a mesh; see ``core/placement.py``).
-    """
+def build_sweep_lanes(grid: SweepGrid, *,
+                      rounds: Optional[int] = None) -> SweepProgramSpec:
+    """Build every lane of a :class:`~repro.core.scenarios.SweepGrid`'s
+    phase diagram — the grid cells, plus the shared honest baselines —
+    without running anything.  See :class:`SweepProgramSpec`."""
     rounds = grid.rounds if rounds is None else rounds
-    if fast_compile is None:
-        n_params = sum(l.size for l in jax.tree.leaves(init_params))
-        fast_compile = n_params <= 4096
-    t0 = time.perf_counter()
-    init_loss = float(eval_fn(init_params))
     n_honest = grid.n_honest
     n_total = n_honest + max(grid.attacker_counts)
     code = BEHAVIOUR_CODES[grid.attack]
@@ -463,12 +452,72 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
                 coalition=coalition_for(0.0, 0)))
             metas.append((None, topo, reds[0], 0.0, 0, 0.0, seed))
 
-    state, recs, final = run_campaign(
-        loss_fn, init_params, optimizer, data_fn, stack_lanes(lanes),
-        rounds=rounds,
-        aggregator=agg_specs if len(agg_specs) > 1 else agg_specs[0][0],
-        agg_kwargs=agg_specs[0][1] if len(agg_specs) == 1 else None,
+    def coalition_coverage(red, cfrac, count) -> float:
+        cov = custody_for(red, count) & coalition_for(cfrac, count)[:, None]
+        return float(cov.any(axis=0).mean())
+
+    return SweepProgramSpec(
+        lanes=lanes, metas=metas, agg_specs=agg_specs,
         verify=any(reg.verification is not None for reg in grid.regimes),
+        has_custody=has_custody, n_honest=n_honest, n_total=n_total,
+        coalition_coverage=coalition_coverage)
+
+
+def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
+          grid: SweepGrid, *, rounds: Optional[int] = None,
+          fast_compile: Optional[bool] = None,
+          plan: Optional[MeshPlan] = None) -> SweepResult:
+    """Measure a whole §5.5 phase diagram as **one** compiled device program.
+
+    Every (regime × topology × attacker count × scale × seed) cell is a
+    lane of a single campaign: verification differences ride in the traced
+    ``p_check``/``tolerance`` lanes (``p_check=0`` disables audits),
+    aggregator differences in the ``agg_id`` lane of a multi-aggregator
+    round (the gradient / corruption / audit machinery — the bulk of the
+    compile cost — is shared), topology differences in the traced
+    ``mixing`` lane of the decentralized round (``grid.topologies``
+    non-empty — every lane then runs per-node replicas + neighborhood
+    aggregation + gossip mixing), custody differences in the traced
+    ``custody``/``coalition`` lanes (``grid.redundancies`` /
+    ``grid.coalition_fractions`` non-empty — every lane then records the
+    live coverage frontier and evals the reconstruct attack, feeding
+    :meth:`SweepResult.extractability_table`), and the honest baseline
+    rides along as extra ``count=0`` lanes, computed once per (topology,
+    seed) instead of once per point.  Lane building lives in
+    :func:`build_sweep_lanes` (also what ``analysis.jaxpr_audit`` traces).
+
+    ``fast_compile=None`` decides automatically: tiny models (≤ 4096
+    params) are compile-bound, so they get XLA's fast/low-optimization
+    backend (~3x faster compiles, bit-identical here); larger models are
+    runtime-bound and keep full optimization — the unfused fast path costs
+    far more in memory traffic than it saves in compilation (see
+    :func:`~repro.core.swarm.run_campaign`).
+
+    ``data_fn`` and ``eval_fn`` must be jax-traceable (the fold_in-keyed
+    pipelines in this repo all are).  Each result lane reproduces the
+    single-point :func:`simulate_derailment` run for the same parameters —
+    property-tested in ``tests/test_campaign.py``.
+
+    ``plan`` (a :class:`~repro.core.placement.MeshPlan`, e.g.
+    ``MeshPlan.from_grid(grid)``) shards the sweep's lanes across the
+    plan's mesh — the whole phase diagram still compiles to ONE program,
+    now spanning ``plan.n_devices`` devices.  Lane sharding is bit-exact
+    for centralized grids (allclose on topology-axis grids — the gossip
+    matmul's reductions reorder under a mesh; see ``core/placement.py``).
+    """
+    rounds = grid.rounds if rounds is None else rounds
+    if fast_compile is None:
+        n_params = sum(l.size for l in jax.tree.leaves(init_params))
+        fast_compile = n_params <= 4096
+    t0 = time.perf_counter()
+    init_loss = float(eval_fn(init_params))
+    spec = build_sweep_lanes(grid, rounds=rounds)
+    n_honest, has_custody = spec.n_honest, spec.has_custody
+
+    state, recs, final = run_campaign(
+        loss_fn, init_params, optimizer, data_fn, stack_lanes(spec.lanes),
+        rounds=rounds, aggregator=spec.aggregator,
+        agg_kwargs=spec.agg_kwargs, verify=spec.verify,
         eval_fn=eval_fn, fast_compile=fast_compile, plan=plan)
     slashed = np.asarray(state.slashed)
     final = np.asarray(final)               # (R,) — or (R, 2) with custody:
@@ -480,15 +529,11 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
 
     results_raw = []
     baselines: Dict[Tuple[str, int], float] = {}
-    for j, (reg, topo, red, cfrac, count, scale, seed) in enumerate(metas):
+    for j, (reg, topo, red, cfrac, count, scale, seed) in enumerate(spec.metas):
         if reg is None:
             baselines[(topo, seed)] = float(honest_final[j])
         else:
             results_raw.append((j, reg, topo, red, cfrac, count, scale, seed))
-
-    def coalition_coverage(red, cfrac, count) -> float:
-        cov = custody_for(red, count) & coalition_for(cfrac, count)[:, None]
-        return float(cov.any(axis=0).mean())
 
     results = [DerailmentResult(
         attacker_fraction=count / (n_honest + count) if count else 0.0,
@@ -504,14 +549,14 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
         topology=topo,
         redundancy=red if has_custody else 0,
         coalition_fraction=cfrac,
-        coalition_coverage=(coalition_coverage(red, cfrac, count)
+        coalition_coverage=(spec.coalition_coverage(red, cfrac, count)
                             if has_custody else 1.0),
         final_coverage=float(last_coverage[j]) if has_custody else 1.0,
         extracted_loss=(float(extracted_final[j]) if has_custody
                         else float("nan")),
     ) for j, reg, topo, red, cfrac, count, scale, seed in results_raw]
     return SweepResult(grid=grid, results=results, n_programs=1,
-                       n_runs=len(lanes), wall_s=time.perf_counter() - t0,
+                       n_runs=len(spec.lanes), wall_s=time.perf_counter() - t0,
                        n_devices=plan.n_devices if plan is not None else 1)
 
 

@@ -513,6 +513,14 @@ class ServingEngine:
             self._programs[key] = jax.jit(fn)
         return self._programs[key]
 
+    def program(self, *, has_custody: bool, vmapped: bool) -> Callable:
+        """THE engine program for this (custody, vmapped) signature — the
+        jitted ``fn(params, prompts, lane(s))`` that :meth:`run` /
+        :meth:`run_many` execute, straight from the program cache.  Public
+        so ``analysis.jaxpr_audit`` traces the real serve scan (and so
+        callers can pre-lower it) instead of a reimplementation."""
+        return self._program(has_custody, vmapped)
+
     def _check(self, lane: ServeLane,
                prompts: Optional[Array]) -> Array:
         budgets = np.asarray(lane.max_new)

@@ -574,7 +574,7 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
         def run_aggs(mask):
             if route_kwargs:
                 outs = [fn(submitted, mask,
-                           **{k: v for k, v in lane.agg_kwargs.items()
+                           **{k: v for k, v in sorted(lane.agg_kwargs.items())
                               if k in acc})
                         for fn, acc in agg_fns]
                 return jnp.stack(outs)[lane.agg_id] if len(outs) > 1 else outs[0]
@@ -662,6 +662,29 @@ def scan_rounds(round_fn: Callable, lane: LaneParams, state: SwarmState,
     return state, recs, final
 
 
+def make_scan_program(round_fn: Callable, batch_fn: Callable, rounds: int,
+                      eval_fn: Optional[Callable] = None) -> Callable:
+    """The batched engine's scanned-run program, with donation declared:
+    ``run(lane, params, opt_state, slashed, contrib) -> (SwarmState,
+    RoundRecord-stacked, final_loss)``.
+
+    The engine-owned carry buffers — ``opt_state``, ``slashed``,
+    ``contrib`` — are donated: they are consumed by the scan and handed
+    back as outputs, so XLA can run the whole campaign in place instead of
+    holding a dead copy of the optimizer state for the program's lifetime
+    (at real model sizes the opt state is as large as the params).
+    ``params`` is deliberately NOT donated: the initial params buffer is
+    caller-owned — tests and drivers seed several engines from one
+    ``params0`` — and donating it would invalidate the caller's copy.
+    ``analysis.jaxpr_audit`` (JX006) checks the declared donation is
+    honored in the lowered program."""
+    def run(lane: LaneParams, params, opt_state, slashed, contrib):
+        state = SwarmState(params=params, opt_state=opt_state,
+                           slashed=slashed, contrib=contrib)
+        return scan_rounds(round_fn, lane, state, rounds, batch_fn, eval_fn)
+    return jax.jit(run, donate_argnums=(2, 3, 4))
+
+
 def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
                  lanes: LaneParams, *, rounds: int, aggregator,
                  agg_kwargs: Optional[Dict] = None,
@@ -723,6 +746,52 @@ def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
     if plan is not None:
         params0 = plan.place_params(params0)
         lanes = plan.place_lanes(lanes)
+    fn = make_campaign_program(
+        loss_fn, params0, optimizer, data_fn, lanes, rounds=rounds,
+        aggregator=aggregator, agg_kwargs=agg_kwargs,
+        compression_kind=compression_kind,
+        compression_kwargs=compression_kwargs, verify=verify,
+        eval_fn=eval_fn, batched_data_fn=batched_data_fn,
+        mixing_schedule=mixing_schedule, fused=fused, plan=plan)
+
+    def run_program():
+        if fast_compile:
+            try:
+                return fn.lower(lanes).compile(
+                    compiler_options={
+                        "xla_backend_optimization_level": "0"})(lanes)
+            except Exception:
+                pass
+        return fn(lanes)
+
+    if plan is None:
+        return run_program()
+    with plan.mesh:
+        try:
+            return run_program()
+        except Exception as e:
+            plan.reraise_lowering(e)
+
+
+def make_campaign_program(loss_fn: Callable, params0, optimizer,
+                          data_fn: Callable, lanes: LaneParams, *,
+                          rounds: int, aggregator,
+                          agg_kwargs: Optional[Dict] = None,
+                          compression_kind: Optional[str] = None,
+                          compression_kwargs: Optional[Dict] = None,
+                          verify: bool = False,
+                          eval_fn: Optional[Callable] = None,
+                          batched_data_fn: Optional[Callable] = None,
+                          mixing_schedule: str = "cycle",
+                          fused: Optional[bool] = None,
+                          plan: Optional[MeshPlan] = None) -> Callable:
+    """Build (without running) THE campaign program — the jitted
+    ``fn(lanes)`` that :func:`run_campaign` executes.  ``lanes`` is
+    consulted for static structure only (N, decentralized/custody mode);
+    callers that place lanes on a mesh do so before/after as
+    :func:`run_campaign` does.  Split out so ``analysis.jaxpr_audit`` can
+    trace the *real* engine program — not a reimplementation that could
+    drift — and enforce its invariants statically."""
     n = int(lanes.codes.shape[-1])
     decentralized = lanes.mixing is not None
     has_custody = lanes.custody is not None
@@ -762,25 +831,7 @@ def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
 
     vmapped = (jax.vmap(one_run) if plan is None
                else jax.vmap(one_run, spmd_axis_name=plan.lanes_axis))
-    fn = jax.jit(vmapped)
-
-    def run_program():
-        if fast_compile:
-            try:
-                return fn.lower(lanes).compile(
-                    compiler_options={
-                        "xla_backend_optimization_level": "0"})(lanes)
-            except Exception:
-                pass
-        return fn(lanes)
-
-    if plan is None:
-        return run_program()
-    with plan.mesh:
-        try:
-            return run_program()
-        except Exception as e:
-            plan.reraise_lowering(e)
+    return jax.jit(vmapped)
 
 
 def history_from_records(recs: RoundRecord, node_ids: Sequence[str], *,
@@ -1165,11 +1216,14 @@ class Swarm(_SwarmBase):
 
     def _run_scanned(self, rounds: int) -> None:
         if rounds not in self._scan_cache:
-            core, batch_fn = self._core, self._traced_batch_fn()
-            self._scan_cache[rounds] = jax.jit(
-                lambda lane, st: scan_rounds(core, lane, st, rounds, batch_fn))
+            self._scan_cache[rounds] = make_scan_program(
+                self._core, self._traced_batch_fn(), rounds)
         was_slashed = self._slashed_np.copy()
-        state, recs, _ = self._scan_cache[rounds](self._lane, self._state())
+        st = self._state()
+        # opt_state/slashed/contrib are donated (make_scan_program) and
+        # reassigned from the outputs below — never read the old buffers
+        state, recs, _ = self._scan_cache[rounds](
+            self._lane, st.params, st.opt_state, st.slashed, st.contrib)
         self.params, self.opt_state = state.params, state.opt_state
         # run() numbers rounds from 0 on every call (same as the step loop)
         self.history.extend(history_from_records(

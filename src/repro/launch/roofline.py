@@ -25,6 +25,9 @@ PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
 HBM_PER_CHIP = 16e9          # v5e HBM capacity
+VMEM_BYTES = 16 * 2 ** 20    # ~16 MiB VMEM per core — the budget a kernel's
+                             # double-buffered tile set must fit
+                             # (analysis.pallas_check audits this statically)
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,

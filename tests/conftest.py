@@ -12,6 +12,15 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "kernels: Pallas kernel conformance suite "
         "(run standalone with `pytest -m kernels`; included in tier-1)")
+    config.addinivalue_line(
+        "markers", "analysis: protolint static-analysis golden tests + the "
+        "engine-programs-audit-clean gate (`pytest -m analysis`; tier-1)")
+    config.addinivalue_line(
+        "markers", "sanitize: numeric smoke — one campaign and one serving "
+        "scenario re-run under jax_debug_nans/jax_debug_infs, so a NaN/Inf "
+        "produced anywhere in the hot path raises at the producing "
+        "primitive instead of corrupting results downstream "
+        "(`pytest -m sanitize`; tier-1)")
 
 
 @pytest.fixture(scope="session")

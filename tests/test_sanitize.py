@@ -1,0 +1,99 @@
+"""Numeric-sanitizer smoke (``pytest -m sanitize``, registered in conftest).
+
+Re-runs one real campaign and one real serving scenario under
+``jax_debug_nans`` + ``jax_debug_infs``: every primitive's output is
+checked on device, so a NaN/Inf produced *anywhere* in the hot path —
+gradient, corruption table, wire codec, optimizer update, admission
+arithmetic — raises ``FloatingPointError`` at the producing primitive
+instead of silently corrupting a phase diagram.
+
+Scope note: the campaign runs the ``mean`` aggregator.  The robust
+aggregators are deliberately out of sanitizer scope — their masked
+fixed-shape forms use NaN/Inf *sentinels by design* (NaN-padding +
+``nanquantile`` for medians, +inf-padding for order statistics; see
+``core/aggregation.py``), which is exactly what a NaN-checker flags.
+Their numeric correctness is pinned by tests/test_scenarios.py and the
+kernel conformance suite instead.
+"""
+import contextlib
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import serving, swarm
+from repro.core.swarm import NodeSpec, SwarmConfig
+from repro.optim.optimizer import SGD
+
+pytestmark = pytest.mark.sanitize
+
+
+@contextlib.contextmanager
+def _sanitizers():
+    jax.config.update("jax_debug_nans", True)
+    jax.config.update("jax_debug_infs", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_debug_nans", False)
+        jax.config.update("jax_debug_infs", False)
+
+
+def test_campaign_clean_under_nan_inf_sanitizers():
+    d, n = 8, 4
+    params = {"w": jnp.zeros((d,), jnp.float32)}
+    w_true = jnp.arange(d, dtype=jnp.float32) / d
+
+    def data_fn(i, rnd):
+        k = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(7), i),
+                               rnd)
+        x = jax.random.normal(k, (4, d))
+        return {"x": x, "y": x @ w_true}
+
+    def loss_fn(p, batch):
+        return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+
+    def eval_fn(p):
+        x = jax.random.normal(jax.random.PRNGKey(3), (16, d))
+        return jnp.mean((x @ p["w"] - x @ w_true) ** 2)
+
+    rosters = [
+        [NodeSpec(node_id=f"n{i}") for i in range(n)],
+        [NodeSpec(node_id="n0", byzantine="sign_flip"),
+         NodeSpec(node_id="n1"), NodeSpec(node_id="n2", join_round=1),
+         NodeSpec(node_id="n3", leave_round=2)],
+    ]
+    lanes = swarm.stack_lanes(
+        [swarm.lane_for_nodes(r, SwarmConfig()) for r in rosters])
+    with _sanitizers():
+        state, recs, finals = swarm.run_campaign(
+            loss_fn, params, SGD(lr=0.05), data_fn, lanes, rounds=3,
+            aggregator="mean", eval_fn=eval_fn)
+        finals = np.asarray(finals)
+    assert finals.shape == (2,)
+    assert np.isfinite(finals).all()
+    assert np.isfinite(np.asarray(recs.agg_norm)).all()
+
+
+def test_serving_clean_under_nan_inf_sanitizers():
+    from repro.configs import get_config
+    from repro.models.model import build_model
+
+    cfg = get_config("protocol-125m").reduced(
+        num_layers=1, d_model=32, num_heads=2, head_dim=16, d_ff=64,
+        vocab_size=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 5), 0,
+                                 cfg.vocab_size)
+    engine = serving.ServingEngine(
+        model, serving.ServingConfig(slots=2, max_new=3, steps=16), prompts)
+    lane = serving.build_lane(
+        n_requests=4, prompt_lens=[5, 3, 4, 5], max_new=3, steps=16,
+        n_nodes=3, balances=[5.0, 5.0], fee=1.0, load=1.0)
+    with _sanitizers():
+        result = engine.run(params, lane)
+    assert np.asarray(result.done).all()
+    assert np.isfinite(np.asarray(result.balances)).all()

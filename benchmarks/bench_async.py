@@ -1,0 +1,182 @@
+"""Bounded-staleness async rounds: rounds/s vs the sync engine, straggler
+utilization.
+
+Times the identical swarm round — centered_clip over an (N, D) stack with a
+heterogeneous-speed roster — built synchronously (``staleness_bound=0``)
+and with the bounded-staleness ring (``staleness_bound=K``: snapshot write,
+per-node delay draw, per-node gather, vmapped per-snapshot gradients).  Two
+numbers per setting:
+
+- **engine overhead**: async rounds/s vs the sync baseline — what the ring
+  costs in wall time per round (both are one compiled ``lax.scan``);
+- **straggler-utilization ratio**: what asynchrony buys back.  A
+  bulk-synchronous round waits for the slowest node (round time
+  ``max(1/speed)``, average utilization ``mean(1/speed) / max(1/speed)``);
+  with bound K a slow node spreads its round over K+1 protocol rounds, so
+  the modeled round time is ``max(mean(1/speed), max(1/speed) / (K+1))``.
+  The ratio (async utilization / sync utilization) is the §3 property-5
+  claim quantified against this roster.
+
+Settings:
+
+  tiny    N=8,  D=8 192     (CI smoke)
+  large   N=16, D=262 144   (the stack the ring gather must move)
+
+CLI:  ``python benchmarks/bench_async.py [--tiny] [--json F]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.swarm import (_FAR, LaneParams, init_state, make_round_fn,
+                              scan_rounds)
+from repro.optim.optimizer import SGD
+
+#: filled by run() for the --json artifact
+LAST_META: dict = {}
+
+#: stragglers: a 4x spread, slowest node 16x behind the fastest
+_SPEEDS = (4.0, 1.0, 1.0, 0.25)
+
+
+def _problem(n: int, d_cols: int):
+    target = jax.random.normal(jax.random.PRNGKey(0), (64, d_cols)) * 0.1
+
+    def loss_fn(params, batch):
+        return jnp.mean(jnp.square(batch["x"] @ params["w"]
+                                   - batch["x"] @ target))
+
+    def batch_fn(rnd):
+        k = jax.random.fold_in(jax.random.PRNGKey(7), rnd)
+        return {"x": jax.random.normal(k, (n, 8, 64))}
+
+    return loss_fn, {"w": jnp.zeros((64, d_cols))}, batch_fn
+
+
+def _lane(n: int, staleness_bound: int) -> LaneParams:
+    speeds = jnp.asarray([_SPEEDS[i % len(_SPEEDS)] for i in range(n)])
+    return LaneParams(
+        codes=jnp.zeros((n,), jnp.int32), scales=jnp.ones((n,)),
+        speeds=speeds, joins=jnp.zeros((n,), jnp.int32),
+        leaves=jnp.full((n,), _FAR, jnp.int32),
+        delays=(jnp.full((n,), staleness_bound, jnp.int32)
+                if staleness_bound > 0 else None),
+        base_key=jax.random.PRNGKey(11), p_check=jnp.asarray(0.0),
+        tolerance=jnp.asarray(1e-3), numeric_noise=jnp.asarray(0.0),
+        agg_id=jnp.asarray(0, jnp.int32), agg_kwargs={})
+
+
+def _compile(n: int, d_cols: int, rounds: int, staleness_bound: int):
+    loss_fn, params0, batch_fn = _problem(n, d_cols)
+    opt = SGD(lr=0.05, momentum=0.0)
+    rf = make_round_fn(loss_fn, opt, params0, n, aggregator="centered_clip",
+                       staleness_bound=staleness_bound)
+
+    def prog(lane):
+        return scan_rounds(rf, lane,
+                           init_state(params0, opt, n,
+                                      staleness_bound=staleness_bound),
+                           rounds, batch_fn)
+
+    return jax.jit(prog).lower(_lane(n, staleness_bound)).compile()
+
+
+def _time_per_round(compiled, lane, rounds: int, repeats: int):
+    out = compiled(lane)                      # warm (allocs, transfers)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(lane))
+        best = min(best, time.perf_counter() - t0)
+    return best / rounds, out
+
+
+def _utilization(n: int, staleness_bound: int):
+    """The straggler model documented in the module docstring: per-unit-work
+    times 1/speed, sync rounds gated by the slowest node, async rounds by
+    max(mean, slowest / (K+1))."""
+    t = 1.0 / np.asarray([_SPEEDS[i % len(_SPEEDS)] for i in range(n)])
+    sync_round = t.max()
+    async_round = max(t.mean(), t.max() / (staleness_bound + 1))
+    return t.mean() / sync_round, t.mean() / async_round
+
+
+def _bench_setting(name: str, n: int, d_cols: int, rounds: int,
+                   repeats: int, staleness_bound: int = 3) -> list:
+    rows: list[Row] = []
+    d = 64 * d_cols
+    per_round = {}
+    mean_staleness = 0.0
+    for k in (0, staleness_bound):
+        compiled = _compile(n, d_cols, rounds, k)
+        sec, out = _time_per_round(compiled, _lane(n, k), rounds, repeats)
+        per_round[k] = sec
+        mode = "sync" if k == 0 else "async"
+        extra = ""
+        if k > 0:
+            _, recs, _ = out
+            mean_staleness = float(np.asarray(recs.staleness).mean())
+            extra = f" mean_staleness={mean_staleness:.2f}"
+        rows.append((
+            f"async.{name}.{mode}", sec * 1e6,
+            f"{1.0 / sec:.2f} rounds/s (N={n} D={d} K={k}"
+            f" centered_clip{extra})"))
+
+    overhead = per_round[staleness_bound] / per_round[0]
+    util_sync, util_async = _utilization(n, staleness_bound)
+    ratio = util_async / util_sync
+    rows.append((f"async.{name}.overhead", 0.0,
+                 f"{overhead:.2f}x async wall cost per round over sync "
+                 f"(the K+1-snapshot ring's gather + vmapped grads)"))
+    rows.append((f"async.{name}.utilization", 0.0,
+                 f"straggler-utilization {util_sync:.2f} sync -> "
+                 f"{util_async:.2f} async = {ratio:.2f}x at K="
+                 f"{staleness_bound} (speeds {_SPEEDS})"))
+
+    LAST_META[name] = {
+        "n": n, "d": d, "rounds": rounds,
+        "staleness_bound": staleness_bound,
+        "sync_s_per_round": per_round[0],
+        "async_s_per_round": per_round[staleness_bound],
+        "async_overhead": overhead,
+        "mean_realized_staleness": mean_staleness,
+        "util_sync": util_sync,
+        "util_async": util_async,
+        "straggler_util_ratio": ratio,
+    }
+    return rows
+
+
+def run(tiny_only: bool = False) -> list:
+    rows = _bench_setting("tiny", n=8, d_cols=128, rounds=4, repeats=3)
+    if not tiny_only:
+        rows += _bench_setting("large", n=16, d_cols=4096, rounds=3,
+                               repeats=2)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: tiny setting only")
+    ap.add_argument("--json", default=None, metavar="FILE",
+                    help="dump rows + metadata as JSON")
+    args = ap.parse_args()
+
+    rows = run(tiny_only=args.tiny)
+    emit(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": [{"name": n, "us_per_call": us, "derived": d}
+                               for n, us, d in rows],
+                       "settings": LAST_META}, f, indent=2)

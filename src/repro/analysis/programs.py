@@ -3,11 +3,16 @@
 This module builds the *real* entry-point programs of the engine (the same
 builders ``run_campaign`` / ``derailment.sweep`` / ``ServingEngine`` execute
 — not reimplementations that could drift) against tiny probe problems, and
-hands ``jaxpr_audit`` their :class:`jax.core.ClosedJaxpr`.  Five programs:
+hands ``jaxpr_audit`` their :class:`jax.core.ClosedJaxpr`.  Six programs:
 
 ``round_unfused`` / ``round_fused``
     ``swarm.make_round_fn`` in both hot-path modes, plus the scanned-run
     donation unit (``make_scan_program`` lowered text for JX006).
+``round_async``
+    the bounded-staleness round (``staleness_bound=K``): delay-schedule
+    variants share one fingerprint, the K+1-snapshot ring is donated
+    through the scan, and the staleness-axis *campaign* (two
+    ``build_sweep_lanes`` value-variant grids) fingerprints stably.
 ``campaign``
     ``swarm.make_campaign_program`` — the jit(vmap(scan)) phase-diagram
     program, with value-variants (base / churn / attack) that must share a
@@ -29,7 +34,7 @@ do not depend on problem size.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, FrozenSet, List, Optional, Tuple
 
 import numpy as np
@@ -241,6 +246,79 @@ def build_sweep() -> TracedProgram:
 
 
 # ---------------------------------------------------------------------------
+# async round program (bounded-staleness ring)
+# ---------------------------------------------------------------------------
+def _async_grid(seed: int, scale: float) -> SweepGrid:
+    return SweepGrid(
+        name=f"audit_async_{seed}",
+        description="tiny staleness-axis probe grid for the static audit",
+        regimes=(Regime("cc", "centered_clip"),),
+        n_honest=3, attacker_counts=(1,), seeds=(seed,), scales=(scale,),
+        staleness_bounds=(0, 2), rounds=2)
+
+
+def build_round_async() -> TracedProgram:
+    """The bounded-staleness async round (``swarm.make_round_fn`` with
+    ``staleness_bound=K``): the K+1-snapshot ring must keep static shapes
+    (JX001-004), be donated through the scanned run next to opt_state
+    (JX006), and hold one retrace fingerprint across delay-schedule
+    variants (JX007) — plus the async *campaign* (the staleness-axis sweep
+    via ``derailment.build_sweep_lanes``), whose two value-variant grids
+    share a fingerprint the same way the sync sweep's do."""
+    n, K = 4, 2
+    params, loss_fn, data_fn, eval_fn = _tiny_problem()
+    opt = SGD(lr=0.05)
+    round_fn = swarm.make_round_fn(
+        loss_fn, opt, params, n, aggregator="centered_clip", verify=True,
+        staleness_bound=K)
+    batch_fn = _batch_fn(data_fn, n)
+    state0 = swarm.init_state(params, opt, n, staleness_bound=K)
+    cfg = SwarmConfig(verification=VerificationConfig(p_check=0.5),
+                      staleness_bound=K)
+
+    def stale(nodes, jitter: int = 0):
+        return [replace(nd, delay=(i + jitter) % (K + 1))
+                for i, nd in enumerate(nodes)]
+
+    units = []
+    for label, roster in (("base", stale(_roster(n))),
+                          ("churn", stale(_roster(n, churn=True))),
+                          ("attack", stale(_roster(n, attack=True))),
+                          ("jitter", stale(_roster(n), jitter=1))):
+        lane = swarm.lane_for_nodes(roster, cfg)
+        closed = jax.make_jaxpr(round_fn)(
+            lane, state0, jnp.asarray(0, jnp.int32), batch_fn(0))
+        units.append(TracedUnit(label, closed, group="round_async"))
+
+    # the async campaign: both probe grids carry staleness_bounds=(0, 2),
+    # so the compiled ring has the same K and the jaxprs must coincide
+    fn = None
+    for label, (seed, scale) in (("sweep_base", (0, 10.0)),
+                                 ("sweep_shifted", (1, 50.0))):
+        spec = derailment.build_sweep_lanes(_async_grid(seed, scale), rounds=2)
+        if fn is None:
+            fn = swarm.make_campaign_program(
+                loss_fn, params, opt, data_fn, swarm.stack_lanes(spec.lanes),
+                rounds=2, aggregator=spec.aggregator,
+                agg_kwargs=spec.agg_kwargs, verify=spec.verify,
+                eval_fn=eval_fn)
+        closed = jax.make_jaxpr(fn)(swarm.stack_lanes(spec.lanes))
+        units.append(TracedUnit(label, closed, group="campaign_async"))
+
+    # the scanned async run donates the ring buffer next to opt_state +
+    # slashed + contrib — one aliased output per donated leaf
+    lane = swarm.lane_for_nodes(stale(_roster(n)), cfg)
+    scan_fn = swarm.make_scan_program(round_fn, batch_fn, rounds=3)
+    lowered = scan_fn.lower(lane, state0.params, state0.opt_state,
+                            state0.slashed, state0.contrib,
+                            state0.ring).as_text()
+    min_aliases = (len(jax.tree.leaves(state0.opt_state)) + 2
+                   + len(jax.tree.leaves(state0.ring)))
+    return TracedProgram("round_async", units,
+                         donations=[DonationUnit("scan", lowered, min_aliases)])
+
+
+# ---------------------------------------------------------------------------
 # serving program (custody-gated continuous batching)
 # ---------------------------------------------------------------------------
 def _serve_lane(custody: np.ndarray, steps: int, variant: str):
@@ -285,6 +363,7 @@ def build_serve_step() -> TracedProgram:
 PROGRAM_BUILDERS: Dict[str, Callable[[], TracedProgram]] = {
     "round_unfused": build_round_unfused,
     "round_fused": build_round_fused,
+    "round_async": build_round_async,
     "campaign": build_campaign,
     "sweep": build_sweep,
     "serve_step": build_serve_step,

@@ -45,17 +45,29 @@ def save(path: str, tree, *, step: int = 0) -> None:
 
 
 def restore(path: str, template):
-    """Restore into the structure of ``template`` (shapes are validated)."""
+    """Restore into the structure of ``template``.
+
+    Shapes AND dtypes are validated against the template — the manifest
+    records both at save time, and silently coercing a checkpoint's dtype
+    (the old ``jnp.asarray(arr, dtype=leaf.dtype)`` behaviour) would hide
+    e.g. an fp32 checkpoint restored into a bf16 training run as a quiet
+    precision change.  Errors name the offending key."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    saved_dtypes = manifest.get("dtypes", {})
     with np.load(os.path.join(path, "arrays.npz")) as data:
         arrays = {k: data[k] for k in data.files}
-    flat = jax.tree_util.tree_flatten_with_path(template)
-    paths, treedef = [p for p, _ in flat[0]], flat[1]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
-    for path_e, leaf in flat[0]:
+    for path_e, leaf in flat:
         key = "/".join(str(getattr(e, "key", getattr(e, "idx", e))) for e in path_e)
         arr = arrays[key]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        saved = saved_dtypes.get(key, str(arr.dtype))
+        if saved != str(jnp.dtype(leaf.dtype)):
+            raise ValueError(f"dtype mismatch for {key}: checkpoint has "
+                             f"{saved}, template wants {jnp.dtype(leaf.dtype)}")
         leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
     return jax.tree.unflatten(treedef, leaves)
 

@@ -62,6 +62,7 @@ class DerailmentResult:
     seed: int = 0
     regime: str = ""
     topology: str = ""      # "" = centralized; else a core.topology name
+    staleness_bound: int = 0   # 0 = synchronous round; K = async, ring of K+1
     # -- custody axis (redundancy == 0 means the sweep had no custody lane)
     redundancy: int = 0
     coalition_fraction: float = 0.0
@@ -104,9 +105,10 @@ class DerailmentResult:
 
 
 def make_swarm_nodes(n_honest: int, n_attack: int, attack: str = "inner_product",
-                     scale: float = 50.0):
-    nodes = [NodeSpec(f"h{i}") for i in range(n_honest)]
-    nodes += [NodeSpec(f"adv{i}", byzantine=attack, byzantine_scale=scale)
+                     scale: float = 50.0, delay: int = 0):
+    nodes = [NodeSpec(f"h{i}", delay=delay) for i in range(n_honest)]
+    nodes += [NodeSpec(f"adv{i}", byzantine=attack, byzantine_scale=scale,
+                       delay=delay)
               for i in range(n_attack)]
     return nodes
 
@@ -118,6 +120,7 @@ def simulate_derailment(loss_fn, init_params, optimizer, data_fn, eval_fn, *,
                         attack: str = "inner_product", scale: float = 50.0,
                         baseline_loss: Optional[float] = None,
                         topology: Optional[str] = None,
+                        staleness_bound: int = 0,
                         seed: int = 0, engine: str = "batched") -> DerailmentResult:
     """Measure a single derailment point.
 
@@ -125,21 +128,27 @@ def simulate_derailment(loss_fn, init_params, optimizer, data_fn, eval_fn, *,
     baseline — otherwise *each call* re-trains the honest swarm from
     scratch.  ``topology`` (a ``core.topology`` name) runs the point in the
     decentralized round — the baseline is then trained on the *same*
-    topology so the result isolates the attack, not the graph.  For whole
-    phase diagrams use :func:`sweep`, which shares the baseline and
-    compiles every point of every regime into one program.
+    topology so the result isolates the attack, not the graph.
+    ``staleness_bound=K > 0`` runs the point in the bounded-staleness async
+    round (every node may gradient against a snapshot up to K rounds old);
+    the baseline then runs at the same bound, so the ratio isolates the
+    attack, not the asynchrony.  For whole phase diagrams use
+    :func:`sweep`, which shares the baseline and compiles every point of
+    every regime into one program.
     """
     init_loss = float(eval_fn(init_params))
-    nodes = make_swarm_nodes(n_honest, n_attack, attack, scale)
+    nodes = make_swarm_nodes(n_honest, n_attack, attack, scale,
+                             delay=staleness_bound)
     cfg = SwarmConfig(aggregator=aggregator, verification=verification, seed=seed,
-                      topology=topology,
+                      topology=topology, staleness_bound=staleness_bound,
                       agg_kwargs={"f": max(1, n_attack)} if "krum" in aggregator else {})
     swarm = make_swarm(loss_fn, init_params, optimizer, nodes, cfg, data_fn,
                        engine=engine)
     losses = swarm.run(rounds, eval_fn=eval_fn, eval_every=max(1, rounds // 5))
 
     if baseline_loss is None:
-        base_nodes = [NodeSpec(f"h{i}") for i in range(n_honest)]
+        base_nodes = [NodeSpec(f"h{i}", delay=staleness_bound)
+                      for i in range(n_honest)]
         if topology is not None:
             # keep the mixing graph the SAME SIZE as the attacked swarm's:
             # attacker slots ride as never-joining relays, so the ratio
@@ -149,8 +158,9 @@ def simulate_derailment(loss_fn, init_params, optimizer, data_fn, eval_fn, *,
                            for i in range(n_attack)]
         base = make_swarm(loss_fn, init_params, optimizer, base_nodes,
                           SwarmConfig(aggregator="mean", seed=seed,
-                                      topology=topology), data_fn,
-                          engine=engine)
+                                      topology=topology,
+                                      staleness_bound=staleness_bound),
+                          data_fn, engine=engine)
         baseline_loss = base.run(rounds, eval_fn=eval_fn, eval_every=rounds)[-1]
 
     return DerailmentResult(
@@ -165,6 +175,7 @@ def simulate_derailment(loss_fn, init_params, optimizer, data_fn, eval_fn, *,
         seed=seed,
         regime=aggregator + ("+verified" if verification else ""),
         topology=topology or "",
+        staleness_bound=staleness_bound,
     )
 
 
@@ -187,26 +198,33 @@ class SweepResult:
 
     def phase_table(self) -> str:
         """The §5.5 phase diagram: derailed-seed counts per (regime [,
-        topology], attacker fraction) cell, attackers-slashed appended when
-        any.  Topology-axis sweeps get one row per (regime, topology),
-        labelled ``regime@topology``."""
+        topology][, staleness bound], attacker fraction) cell,
+        attackers-slashed appended when any.  Topology-axis sweeps get one
+        row per (regime, topology), labelled ``regime@topology``;
+        staleness-axis sweeps one row per bound, labelled ``... s=K``."""
         fracs = sorted({r.attacker_fraction for r in self.results})
-        rows: List[Tuple[str, str]] = []          # (regime, topology)
+        sbounds: Tuple = self.grid.staleness_bounds or (None,)
+        rows: List[Tuple[str, str, Optional[int]]] = []
         for reg in self.grid.regimes:
             for topo in (self.grid.topologies or ("",)):
-                if any(r.regime == reg.name and r.topology == topo
-                       for r in self.results):
-                    rows.append((reg.name, topo))
-        labels = [reg + (f"@{topo}" if topo else "") for reg, topo in rows]
+                for sb in sbounds:
+                    if any(r.regime == reg.name and r.topology == topo
+                           and (sb is None or r.staleness_bound == sb)
+                           for r in self.results):
+                        rows.append((reg.name, topo, sb))
+        labels = [reg + (f"@{topo}" if topo else "")
+                  + (f" s={sb}" if sb is not None else "")
+                  for reg, topo, sb in rows]
         width = max([22] + [len(l) + 2 for l in labels])
         head = "regime".ljust(width) + "".join(f"frac={f:.2f}".rjust(12)
                                                for f in fracs)
         lines = [head]
-        for (reg, topo), label in zip(rows, labels):
+        for (reg, topo, sb), label in zip(rows, labels):
             cells = []
             for f in fracs:
                 cell = [r for r in self.results
                         if r.regime == reg and r.topology == topo
+                        and (sb is None or r.staleness_bound == sb)
                         and abs(r.attacker_fraction - f) < 1e-9]
                 if not cell:
                     cells.append("-".rjust(12))
@@ -269,7 +287,8 @@ def _sweep_lane(n_total: int, n_honest: int, count: int, code: int,
                 mixing: Optional[np.ndarray] = None,
                 leaves: Optional[np.ndarray] = None,
                 custody: Optional[np.ndarray] = None,
-                coalition: Optional[np.ndarray] = None) -> LaneParams:
+                coalition: Optional[np.ndarray] = None,
+                delays: Optional[np.ndarray] = None) -> LaneParams:
     """One run lane: honest nodes first, ``count`` attackers, then padding
     that never joins (all regimes share a fixed N so they vmap together).
     Node indices — and therefore the fold_in key schedule — match the
@@ -286,7 +305,10 @@ def _sweep_lane(n_total: int, n_honest: int, count: int, code: int,
     coincide (pinned in tests/test_topology.py).  ``leaves`` (custody-churn
     sweeps) overrides the default never-leave schedule; ``custody`` /
     ``coalition`` are this lane's (n_total, S) custody matrix and (n_total,)
-    extraction-coalition mask (padding rows hold nothing / join nothing)."""
+    extraction-coalition mask (padding rows hold nothing / join nothing).
+    ``delays`` (async sweeps) is this lane's (n_total,) per-node staleness
+    cap — a *traced* lane, so every bound of the staleness axis shares the
+    one program compiled for the max bound's snapshot ring."""
     codes = np.zeros(n_total, np.int32)
     codes[n_honest:n_honest + count] = code
     scales = np.full(n_total, 10.0, np.float32)     # NodeSpec default
@@ -302,6 +324,7 @@ def _sweep_lane(n_total: int, n_honest: int, count: int, code: int,
                 else leaves),
         custody=custody,
         coalition=coalition,
+        delays=delays,
         base_key=_seed_key(seed),
         p_check=np.float32(v.p_check if v else 0.0),
         tolerance=np.float32(v.tolerance if v else 1.0),
@@ -387,6 +410,22 @@ def build_sweep_lanes(grid: SweepGrid, *,
     reds = (grid.redundancies or (2,)) if has_custody else (0,)
     cfracs = (grid.coalition_fractions or (0.0,)) if has_custody else (0.0,)
 
+    # the asynchrony axis: per-node staleness caps ride as a traced lane
+    # (swarm.make_campaign_program sizes the snapshot ring by the MAX cap
+    # across all lanes, so every bound — including 0 — shares one compiled
+    # program); grids without the axis pass delays=None and keep the
+    # synchronous round bit-exactly as before
+    has_async = bool(grid.staleness_bounds)
+    sbounds = grid.staleness_bounds if has_async else (0,)
+
+    @functools.lru_cache(maxsize=None)
+    def delays_for(bound: int, count: int) -> Optional[np.ndarray]:
+        if not has_async:
+            return None
+        d = np.zeros(n_total, np.int32)
+        d[:n_honest + count] = bound
+        return d
+
     @functools.lru_cache(maxsize=None)
     def custody_for(red: int, count: int) -> Optional[np.ndarray]:
         if not has_custody:
@@ -428,29 +467,33 @@ def build_sweep_lanes(grid: SweepGrid, *,
     for reg in grid.regimes:
         aid = agg_index[(reg.aggregator, tuple(sorted(reg.agg_kwargs.items())))]
         for topo in topos:
-            for red in reds:
-                for cfrac in cfracs:
-                    for count in grid.attacker_counts:
-                        for scale in grid.scales:
-                            for seed in grid.seeds:
-                                lanes.append(_sweep_lane(
-                                    n_total, n_honest, count, code, scale,
-                                    seed, reg.verification, aid,
-                                    traced_kw(count), mixing=mixings[topo],
-                                    leaves=leaves_for(seed),
-                                    custody=custody_for(red, count),
-                                    coalition=coalition_for(cfrac, count)))
-                                metas.append((reg, topo, red, cfrac, count,
-                                              scale, seed))
-    for topo in topos:                      # baseline lanes (count = 0),
-        for seed in grid.seeds:             # shared per (topology, seed);
-            lanes.append(_sweep_lane(      # custody grids: same churn, an
-                n_total, n_honest, 0, code, 0.0, seed, None,   # empty
-                agg_index[("mean", ())], traced_kw(0),          # coalition
-                mixing=mixings[topo], leaves=leaves_for(seed),
-                custody=custody_for(reds[0], 0),
-                coalition=coalition_for(0.0, 0)))
-            metas.append((None, topo, reds[0], 0.0, 0, 0.0, seed))
+            for sbound in sbounds:
+                for red in reds:
+                    for cfrac in cfracs:
+                        for count in grid.attacker_counts:
+                            for scale in grid.scales:
+                                for seed in grid.seeds:
+                                    lanes.append(_sweep_lane(
+                                        n_total, n_honest, count, code, scale,
+                                        seed, reg.verification, aid,
+                                        traced_kw(count), mixing=mixings[topo],
+                                        leaves=leaves_for(seed),
+                                        custody=custody_for(red, count),
+                                        coalition=coalition_for(cfrac, count),
+                                        delays=delays_for(sbound, count)))
+                                    metas.append((reg, topo, sbound, red,
+                                                  cfrac, count, scale, seed))
+    for topo in topos:                  # baseline lanes (count = 0), shared
+        for sbound in sbounds:          # per (topology, staleness bound,
+            for seed in grid.seeds:     # seed) — async baselines run at the
+                lanes.append(_sweep_lane(   # same bound, so the ratio
+                    n_total, n_honest, 0, code, 0.0, seed, None,  # isolates
+                    agg_index[("mean", ())], traced_kw(0),  # the attack,
+                    mixing=mixings[topo], leaves=leaves_for(seed),  # not
+                    custody=custody_for(reds[0], 0),        # the asynchrony
+                    coalition=coalition_for(0.0, 0),
+                    delays=delays_for(sbound, 0)))
+                metas.append((None, topo, sbound, reds[0], 0.0, 0, 0.0, seed))
 
     def coalition_coverage(red, cfrac, count) -> float:
         cov = custody_for(red, count) & coalition_for(cfrac, count)[:, None]
@@ -528,25 +571,27 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
         honest_final = final
 
     results_raw = []
-    baselines: Dict[Tuple[str, int], float] = {}
-    for j, (reg, topo, red, cfrac, count, scale, seed) in enumerate(spec.metas):
+    baselines: Dict[Tuple[str, int, int], float] = {}
+    for j, (reg, topo, sb, red, cfrac, count, scale, seed) in enumerate(spec.metas):
         if reg is None:
-            baselines[(topo, seed)] = float(honest_final[j])
+            baselines[(topo, sb, seed)] = float(honest_final[j])
         else:
-            results_raw.append((j, reg, topo, red, cfrac, count, scale, seed))
+            results_raw.append((j, reg, topo, sb, red, cfrac, count, scale,
+                                seed))
 
     results = [DerailmentResult(
         attacker_fraction=count / (n_honest + count) if count else 0.0,
         aggregator=reg.aggregator,
         verified=reg.verification is not None,
         final_loss=float(honest_final[j]),
-        baseline_loss=baselines[(topo, seed)],
+        baseline_loss=baselines[(topo, sb, seed)],
         attackers_slashed=int(slashed[j, n_honest:n_honest + count].sum()),
         n_attackers=count,
         init_loss=init_loss,
         seed=seed,
         regime=reg.name,
         topology=topo,
+        staleness_bound=sb,
         redundancy=red if has_custody else 0,
         coalition_fraction=cfrac,
         coalition_coverage=(spec.coalition_coverage(red, cfrac, count)
@@ -554,7 +599,7 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
         final_coverage=float(last_coverage[j]) if has_custody else 1.0,
         extracted_loss=(float(extracted_final[j]) if has_custody
                         else float("nan")),
-    ) for j, reg, topo, red, cfrac, count, scale, seed in results_raw]
+    ) for j, reg, topo, sb, red, cfrac, count, scale, seed in results_raw]
     return SweepResult(grid=grid, results=results, n_programs=1,
                        n_runs=len(spec.lanes), wall_s=time.perf_counter() - t0,
                        n_devices=plan.n_devices if plan is not None else 1)

@@ -53,7 +53,14 @@ class Ledger:
         self.stakes[node] = self.stakes.get(node, 0.0) + amount
 
     def slash(self, node: str) -> float:
-        """Destroy the node's stake + forfeit its shares (caught cheating)."""
+        """Destroy the node's stake + forfeit its shares (caught cheating).
+
+        Slashing a node the ledger has never seen (no stake, no balance) is
+        a **no-op recording nothing**: there is no capital to destroy, and a
+        phantom ``("slash", node, 0.0)`` event would put a participant that
+        never staked or contributed into the audit trail."""
+        if node not in self.stakes and node not in self.balances:
+            return 0.0
         stake_lost = self.stakes.pop(node, 0.0)
         shares_lost = self.balances.pop(node, 0.0)
         self.burned += shares_lost

@@ -133,11 +133,15 @@ def batched_data_fn_for(data_fn: Callable[[int, int], dict], n_nodes: int,
 
 # -- helpers -------------------------------------------------------------------
 def _mixed_nodes(n: int, n_byz: int, attack: str, scale: float,
-                 speeds: Tuple[float, ...] = (1.0,)) -> List[NodeSpec]:
-    """n - n_byz honest nodes (speeds cycling) followed by n_byz attackers."""
-    nodes = [NodeSpec(f"h{i}", speed=speeds[i % len(speeds)])
+                 speeds: Tuple[float, ...] = (1.0,),
+                 delays: Tuple[int, ...] = (0,),
+                 byz_delay: int = 0) -> List[NodeSpec]:
+    """n - n_byz honest nodes (speeds/delays cycling) then n_byz attackers."""
+    nodes = [NodeSpec(f"h{i}", speed=speeds[i % len(speeds)],
+                      delay=delays[i % len(delays)])
              for i in range(n - n_byz)]
-    nodes += [NodeSpec(f"adv{i}", byzantine=attack, byzantine_scale=scale)
+    nodes += [NodeSpec(f"adv{i}", byzantine=attack, byzantine_scale=scale,
+                       delay=byz_delay)
               for i in range(n_byz)]
     return nodes
 
@@ -309,6 +313,63 @@ register_scenario(Scenario(
 ))
 
 register_scenario(Scenario(
+    name="straggler_majority",
+    description=("Bounded-staleness asynchrony (§3 property 5): two thirds "
+                 "of an honest swarm are stragglers gradienting against "
+                 "parameter snapshots up to 3 rounds old (delay cycles "
+                 "0/3/3, speeds 1x/0.5x/0.5x) under staleness_bound=3, "
+                 "mean aggregation.  The convergence price of *not* "
+                 "waiting for the slow majority — the DOWNPOUR regime."),
+    make_nodes=lambda n: _mixed_nodes(n, 0, "zero", 0.0,
+                                      speeds=(1.0, 0.5, 0.5),
+                                      delays=(0, 3, 3)),
+    make_config=lambda seed: SwarmConfig(aggregator="mean",
+                                         staleness_bound=3, seed=seed),
+))
+
+register_scenario(Scenario(
+    name="stale_poisoning",
+    description=("Stale Byzantine updates (§3.3 x asynchrony): a 25% "
+                 "sign-flip minority submits maximally stale poisoned "
+                 "gradients (delay=3) while honest nodes run fresh — does "
+                 "CenteredClip's breakdown point survive when the attack "
+                 "rides the staleness the protocol must tolerate?  Audits "
+                 "recompute against the claimed stale snapshot (the delay "
+                 "is part of the claim), so staleness alone never "
+                 "slashes — only corruption does."),
+    make_nodes=lambda n: _mixed_nodes(n, max(1, n // 4), "sign_flip", 10.0,
+                                      byz_delay=3),
+    make_config=lambda seed: SwarmConfig(
+        aggregator="centered_clip",
+        verification=VerificationConfig(p_check=0.25, stake=10.0,
+                                        tolerance=1e-3, jackpot=5.0),
+        staleness_bound=3, seed=seed),
+))
+
+def _async_churn_nodes(n: int) -> List[NodeSpec]:
+    core = max(2, n // 3)
+    nodes = [NodeSpec(f"core{i}", delay=i % 3) for i in range(core)]
+    for i in range(n - core):
+        join = 1 + (i % 6)
+        nodes.append(NodeSpec(f"churn{i}", join_round=join,
+                              leave_round=join + 8 + (i % 5),
+                              delay=1 + (i % 2)))
+    return nodes
+
+register_scenario(Scenario(
+    name="async_churn",
+    description=("Asynchrony x elastic membership (§3 properties 3+5): the "
+                 "high_churn_elastic roster with per-node staleness (core "
+                 "delays cycle 0/1/2, transients 1/2) under "
+                 "staleness_bound=2 — late joiners gradient against "
+                 "snapshots taken before they were active, the hardest "
+                 "bookkeeping case for the snapshot ring."),
+    make_nodes=_async_churn_nodes,
+    make_config=lambda seed: SwarmConfig(aggregator="mean",
+                                         staleness_bound=2, seed=seed),
+))
+
+register_scenario(Scenario(
     name="partitioned_swarm",
     description=("Near-partition stress (§5.5): two ring clusters joined "
                  "by a single bridge edge (near-zero spectral gap).  "
@@ -385,7 +446,17 @@ class SweepGrid:
     staggers that fraction of the honest roster out of the run mid-sweep
     (drawn per seed), which is what drives redundancy-starved cells into
     the "degraded" regime — the custody analogue of churn-coupled
-    mixing."""
+    mixing.
+
+    A non-empty ``staleness_bounds`` adds the **asynchrony axis**: every
+    cell is additionally crossed with each bound K — all nodes in that
+    cell gradient against snapshots up to K rounds old (realized delays
+    drawn per ``(seed, node, round)``).  Per-node delay caps ride as a
+    traced lane, so every bound shares ONE compiled program shaped by the
+    *max* bound's K+1-snapshot ring; honest baselines are shared per
+    (topology, staleness bound, seed).  A 0 entry is the synchronous
+    limit measured inside the async program (numerically equal, not
+    bit-exact, to the dedicated sync engine — reduction order differs)."""
     name: str
     description: str
     regimes: Tuple[Regime, ...]
@@ -401,6 +472,7 @@ class SweepGrid:
     num_shards: int = 16
     custody_max_fraction: float = 0.5
     custody_leave_fraction: float = 0.0
+    staleness_bounds: Tuple[int, ...] = ()
 
     @property
     def has_custody(self) -> bool:
@@ -411,6 +483,7 @@ class SweepGrid:
         return (len(self.regimes) * len(self.attacker_counts)
                 * len(self.scales) * len(self.seeds)
                 * max(1, len(self.topologies))
+                * max(1, len(self.staleness_bounds))
                 * max(1, len(self.redundancies))
                 * max(1, len(self.coalition_fractions)))
 
@@ -418,9 +491,11 @@ class SweepGrid:
     def n_lanes(self) -> int:
         """Total campaign lanes ``derailment.sweep`` builds for this grid:
         every measured point plus the shared honest-baseline lanes (one per
-        (topology, seed)).  This is the count a
+        (topology, staleness bound, seed)).  This is the count a
         :class:`~repro.core.placement.MeshPlan` must shard evenly."""
-        return self.n_points + max(1, len(self.topologies)) * len(self.seeds)
+        return self.n_points + (max(1, len(self.topologies))
+                                * max(1, len(self.staleness_bounds))
+                                * len(self.seeds))
 
 
 SWEEP_GRIDS: Dict[str, SweepGrid] = {}
@@ -495,6 +570,36 @@ register_sweep_grid(SweepGrid(
     attacker_counts=(1, 3, 6),
     seeds=(0, 1),
     rounds=20,
+))
+
+register_sweep_grid(SweepGrid(
+    name="no_off_async",
+    description=("The asynchrony frontier (§5.5 x §3): does CenteredClip's "
+                 "breakdown point survive *stale* Byzantine updates?  2 "
+                 "regimes x 3 staleness bounds x 3 attacker counts x 2 "
+                 "seeds — every bound shares one compiled program (per-node "
+                 "delay caps are a traced lane over the max bound's ring), "
+                 "so staleness x attacker-fraction renders like any other "
+                 "phase diagram."),
+    regimes=(Regime("mean", "mean"),
+             Regime("centered_clip", "centered_clip")),
+    staleness_bounds=(0, 2, 4),
+    n_honest=10,
+    attacker_counts=(1, 3, 6),
+    seeds=(0, 1),
+    rounds=20,
+))
+
+register_sweep_grid(SweepGrid(
+    name="no_off_async_smoke",
+    description=("CI smoke for the asynchrony axis: 1 regime x 2 staleness "
+                 "bounds x 2 counts x 1 seed = 4 tiny runs."),
+    regimes=(Regime("centered_clip", "centered_clip"),),
+    staleness_bounds=(0, 2),
+    n_honest=6,
+    attacker_counts=(2, 6),
+    seeds=(0,),
+    rounds=8,
 ))
 
 register_sweep_grid(SweepGrid(

@@ -119,7 +119,7 @@ BEHAVIOUR_CODES: Dict[str, int] = {name: i for i, name in enumerate(BEHAVIOURS)}
 # is what makes the sequential reference and the batched engine bit-identical
 # in their randomness (and keeps the batched round free of host-side key
 # chains that would serialize it).
-_CORRUPT, _WIRE, _AUDIT_SEL, _AUDIT_NOISE = range(4)
+_CORRUPT, _WIRE, _AUDIT_SEL, _AUDIT_NOISE, _DELAY = range(5)
 
 _FAR = np.iinfo(np.int32).max
 
@@ -138,6 +138,11 @@ class NodeSpec:
     byzantine_scale: float = 10.0
     join_round: int = 0
     leave_round: Optional[int] = None
+    #: max gradient staleness (rounds) this node may run behind — only read
+    #: when the config sets ``staleness_bound > 0``, and clamped to it; the
+    #: *realized* per-round delay is drawn uniformly in [0, min(delay,
+    #: bound, round)] from the (seed, _DELAY, round, node) key schedule.
+    delay: int = 0
 
     def active(self, rnd: int) -> bool:
         return self.join_round <= rnd and (self.leave_round is None or rnd < self.leave_round)
@@ -184,6 +189,13 @@ class SwarmConfig:
     #: fused hot path (kernels.masked_agg + kernels.qsgd_decode): None =
     #: auto by stack size (see make_round_fn), True = force, False = never.
     fused: Optional[bool] = None
+    #: bounded-staleness async rounds (paper §3 heterogeneity): K > 0 keeps
+    #: a fixed-shape ring of the last K+1 parameter snapshots in the scanned
+    #: carry and lets each node gradient against a deterministically-drawn
+    #: delayed snapshot (see NodeSpec.delay).  0 (default) is the
+    #: bulk-synchronous round — the async machinery is not even traced, so
+    #: staleness_bound=0 is bit-exact with the pre-async engine.
+    staleness_bound: int = 0
 
 
 def corrupt(kind: str, grad_flat: Array, honest_mean: Array, scale: float, key) -> Array:
@@ -260,6 +272,12 @@ class LaneParams(NamedTuple):
     round records the live coverage frontier each round, and the campaign
     eval reassembles the coalition's shards next to the honest eval.
     ``None`` (the default) disables custody; all lanes must agree.
+
+    ``delays`` is the bounded-staleness lane — (N,) int32 per-node *maximum*
+    delays, only read by rounds built with ``staleness_bound > 0`` (the ring
+    size is static; the delay values are traced, so one compiled campaign
+    sweeps *staleness* as a lane axis).  ``None`` (the default) means the
+    synchronous round; all lanes of a campaign must agree.
     """
     codes: Array          # (N,) int32 behaviour codes (BEHAVIOUR_CODES)
     scales: Array         # (N,) f32 byzantine scales
@@ -275,6 +293,7 @@ class LaneParams(NamedTuple):
     mixing: Optional[Array] = None  # (N, N) | (T, N, N) mixing matrix | None
     custody: Optional[Array] = None    # (N, S) bool custody matrix | None
     coalition: Optional[Array] = None  # (N,) bool extraction coalition | None
+    delays: Optional[Array] = None     # (N,) int32 max staleness | None
 
 
 class SwarmState(NamedTuple):
@@ -285,6 +304,10 @@ class SwarmState(NamedTuple):
     opt_state: Any        # optimizer state (pytree; ditto)
     slashed: Array        # (N,) bool — caught by an audit in a prior round
     contrib: Array        # (N,) f32 — speed-weighted kept rounds (mint counter)
+    ring: Any = None      # staleness ring: params-shaped pytree with a
+                          # leading (K+1,) snapshot axis — slot r % (K+1)
+                          # holds the params as of the start of round r.
+                          # None in synchronous rounds (staleness_bound=0).
 
 
 class RoundRecord(NamedTuple):
@@ -300,6 +323,8 @@ class RoundRecord(NamedTuple):
     coverage: Array       # () f32 fraction of custody shards held by >= 1
                           # active node — the live extraction frontier
                           # (1.0 when the round has no custody lane)
+    staleness: Array      # () f32 mean realized gradient delay (rounds) over
+                          # active nodes (0 in synchronous rounds)
 
 
 def lane_for_nodes(nodes: Sequence[NodeSpec], cfg: SwarmConfig, *,
@@ -314,7 +339,9 @@ def lane_for_nodes(nodes: Sequence[NodeSpec], cfg: SwarmConfig, *,
     ``cfg.custody`` draws the (N, S) custody matrix with ``custody.seed``
     (same convention: run seeds never reshuffle who holds what) and marks
     the coalition as the last ``ceil(coalition_fraction * N)`` roster
-    slots."""
+    slots.  ``cfg.staleness_bound > 0`` fills the ``delays`` lane with each
+    node's ``NodeSpec.delay`` clamped to the bound (0 leaves it ``None`` —
+    the synchronous round)."""
     from repro.core import topology as topo  # local: keep import cycle-free
     v = cfg.verification
     custody = coalition = None
@@ -337,10 +364,15 @@ def lane_for_nodes(nodes: Sequence[NodeSpec], cfg: SwarmConfig, *,
             w = topo.churn_coupled_mixing(
                 w, joins, leaves, rounds=(max(events) + 1) if events else 1)
         mixing = jnp.asarray(w, jnp.float32)
+    delays = None
+    if cfg.staleness_bound > 0:
+        delays = jnp.asarray([min(n.delay, cfg.staleness_bound)
+                              for n in nodes], jnp.int32)
     return LaneParams(
         mixing=mixing,
         custody=custody,
         coalition=coalition,
+        delays=delays,
         codes=jnp.asarray([n.behaviour_code for n in nodes], jnp.int32),
         scales=jnp.asarray([n.byzantine_scale for n in nodes], jnp.float32),
         speeds=jnp.asarray([n.speed for n in nodes], jnp.float32),
@@ -365,13 +397,28 @@ def stack_lanes(lanes: Sequence[LaneParams]) -> LaneParams:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)
 
 
-def init_state(params, optimizer, n_nodes: int) -> SwarmState:
+def init_ring(params, staleness_bound: int):
+    """The bounded-staleness snapshot ring: ``params`` repeated along a new
+    leading (K+1,) axis (every slot starts at the initial params, which is
+    exactly the round-0 snapshot any early-round delay resolves to).
+    ``jnp.repeat`` (not ``broadcast_to``) so each slot owns real memory —
+    the ring is donated through the scanned run and updated in place."""
+    if staleness_bound <= 0:
+        return None
+    return jax.tree.map(
+        lambda l: jnp.repeat(l[None], staleness_bound + 1, axis=0), params)
+
+
+def init_state(params, optimizer, n_nodes: int, *,
+               staleness_bound: int = 0) -> SwarmState:
     return SwarmState(params=params, opt_state=optimizer.init(params),
                       slashed=jnp.zeros(n_nodes, bool),
-                      contrib=jnp.zeros(n_nodes, jnp.float32))
+                      contrib=jnp.zeros(n_nodes, jnp.float32),
+                      ring=init_ring(params, staleness_bound))
 
 
-def init_decentralized_state(params, optimizer, n_nodes: int) -> SwarmState:
+def init_decentralized_state(params, optimizer, n_nodes: int, *,
+                             staleness_bound: int = 0) -> SwarmState:
     """Per-node replica state: every node starts from the same ``params``
     with its own (vmapped) optimizer state."""
     replicas = jax.tree.map(
@@ -379,7 +426,8 @@ def init_decentralized_state(params, optimizer, n_nodes: int) -> SwarmState:
     return SwarmState(params=replicas,
                       opt_state=jax.vmap(optimizer.init)(replicas),
                       slashed=jnp.zeros(n_nodes, bool),
-                      contrib=jnp.zeros(n_nodes, jnp.float32))
+                      contrib=jnp.zeros(n_nodes, jnp.float32),
+                      ring=init_ring(replicas, staleness_bound))
 
 
 def consensus_params(params):
@@ -402,7 +450,8 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
                   compression_kwargs: Optional[Dict] = None,
                   verify: bool = False, decentralized: bool = False,
                   mixing_schedule: str = "cycle",
-                  fused: Optional[bool] = None) -> Callable:
+                  fused: Optional[bool] = None,
+                  staleness_bound: int = 0) -> Callable:
     """Build the pure round: ``round_fn(lane, state, rnd, batches) ->
     (state, RoundRecord)``.
 
@@ -450,6 +499,26 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
     distance arithmetic (selection-equal away from exact score ties) —
     pinned by tests/test_kernel_conformance.py.  The resolved choice is
     exposed as ``round_fn.fused``.
+
+    ``staleness_bound`` (static — it sizes the snapshot ring) builds the
+    **bounded-staleness async round**: ``state.ring`` carries the last K+1
+    parameter snapshots (fixed shape — no recompiles), each round writes
+    the current params into slot ``round % (K+1)``, draws a per-node
+    realized delay ``~ U[0, min(lane.delays[i], round, K)]`` from the
+    (seed, _DELAY, round, node) key schedule, and each node gradients
+    against *its own delayed snapshot* (``vmap`` over the gathered stack).
+    Everything downstream — corruption, wire, aggregation masks — consumes
+    the mixed-staleness gradient stack unchanged, and the §4.2 audit stays
+    sound *by construction*: the validator recomputes from the same ``gf``
+    row the contributor produced, i.e. against the same stale snapshot —
+    the delay is part of the claim because it is part of the shared key
+    schedule.  ``staleness_bound=0`` (default) takes the literal
+    synchronous code path (no ring, no extra keys): bit-exact with the
+    pre-async engine by construction, pinned in tests/test_async.py.
+    Note a zero-*delay* lane inside a ``staleness_bound>0`` program is only
+    allclose to the synchronous program — gathering per-node snapshots
+    batches the gradient matmuls differently (reduction order), exactly
+    like the FC-decentralized vs centralized pinning.
     """
     leaves = jax.tree.leaves(params_template)
     treedef = jax.tree.structure(params_template)
@@ -523,28 +592,62 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
         return qsgd_decode_ops.wire_encode(key, g, **ckw)
 
     def round_fn(lane: LaneParams, state: SwarmState, rnd, batches):
+        if staleness_bound > 0 and lane.delays is None:
+            raise ValueError("staleness_bound > 0 needs a LaneParams.delays "
+                             "lane (build it via lane_for_nodes with "
+                             "SwarmConfig.staleness_bound set)")
         active = (lane.joins <= rnd) & (rnd < lane.leaves) & (~state.slashed)
         nact = jnp.sum(active.astype(jnp.float32))
 
-        # decentralized: every node gradients its OWN replica (leading node
-        # axis on state.params); centralized: all nodes share one params
-        grad_axes = (0, 0) if decentralized else (None, 0)
-        grads = jax.vmap(grad_fn, in_axes=grad_axes)(state.params, batches)
+        # the whole (purpose, round, node) fold_in schedule in three batched
+        # call sites — same keys as _node_key per (purpose, rnd, i), but the
+        # compiler sees 3 threefry kernels instead of 12+ (sweeps are
+        # compile-bound, and threefry dominates the round's compile cost).
+        # Synchronous rounds don't trace the _DELAY purpose at all.
+        pk = jax.vmap(lambda p: jax.random.fold_in(lane.base_key, p))(
+            jnp.arange(5 if staleness_bound > 0 else 4))
+        rk = jax.vmap(lambda k: jax.random.fold_in(k, rnd))(pk)
+        allk = jax.vmap(lambda k: jax.vmap(
+            lambda i: jax.random.fold_in(k, i))(idx))(rk)         # (P, N, 2)
+        ck, wk, sk, nk = allk[_CORRUPT], allk[_WIRE], \
+            allk[_AUDIT_SEL], allk[_AUDIT_NOISE]
+
+        if staleness_bound > 0:
+            # async round: snapshot first (slot r % (K+1) holds the params
+            # as of the start of round r — a realized delay of 0 reads the
+            # same params the synchronous round would), then per-node
+            # realized delays, then gradients at the gathered snapshots.
+            ring_len = jnp.int32(staleness_bound + 1)
+            ring = jax.tree.map(
+                lambda r, l: r.at[jnp.mod(rnd, ring_len)].set(l),
+                state.ring, state.params)
+            cap = jnp.minimum(jnp.minimum(lane.delays, rnd),
+                              jnp.int32(staleness_bound))
+            delay = jax.vmap(
+                lambda k, m: jax.random.randint(k, (), 0, m + jnp.int32(1)))(
+                allk[_DELAY], cap)
+            slots = jnp.mod(rnd - delay, ring_len)                # (N,)
+            if decentralized:
+                # ring leaves are (K+1, N, ...): node i reads its OWN
+                # replica as of round rnd - delay[i]
+                delayed = jax.tree.map(lambda r: r[slots, idx], ring)
+            else:
+                delayed = jax.tree.map(lambda r: r[slots], ring)
+            grads = jax.vmap(grad_fn, in_axes=(0, 0))(delayed, batches)
+            staleness = (jnp.sum(delay.astype(jnp.float32)
+                                 * active.astype(jnp.float32))
+                         / jnp.maximum(nact, 1.0))
+        else:
+            # decentralized: every node gradients its OWN replica (leading
+            # node axis on state.params); centralized: one shared params
+            ring = state.ring
+            grad_axes = (0, 0) if decentralized else (None, 0)
+            grads = jax.vmap(grad_fn, in_axes=grad_axes)(state.params,
+                                                         batches)
+            staleness = jnp.zeros((), jnp.float32)
         gf = flatten_stack(grads)                                 # (N, D)
         maskf = active.astype(jnp.float32)[:, None]
         honest_mean = jnp.sum(gf * maskf, axis=0) / jnp.maximum(nact, 1.0)
-
-        # the whole (purpose, round, node) fold_in schedule in three batched
-        # call sites — same keys as _node_key per (purpose, rnd, i), but the
-        # compiler sees 3 threefry kernels instead of 12 (sweeps are
-        # compile-bound, and threefry dominates the round's compile cost)
-        pk = jax.vmap(lambda p: jax.random.fold_in(lane.base_key, p))(
-            jnp.arange(4))
-        rk = jax.vmap(lambda k: jax.random.fold_in(k, rnd))(pk)
-        allk = jax.vmap(lambda k: jax.vmap(
-            lambda i: jax.random.fold_in(k, i))(idx))(rk)         # (4, N, 2)
-        ck, wk, sk, nk = allk[_CORRUPT], allk[_WIRE], \
-            allk[_AUDIT_SEL], allk[_AUDIT_NOISE]
         corrupted = _corrupt_all(lane.codes, gf, honest_mean, lane.scales, ck)
 
         if fused_qsgd:
@@ -563,7 +666,12 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
             sel = jax.vmap(jax.random.uniform)(sk)
             audited = active & (sel < lane.p_check)
             # the validator recomputes the honest gradient and re-encodes it
-            # with the submitter's wire key (see SequentialSwarm.step)
+            # with the submitter's wire key (see SequentialSwarm.step).  In
+            # async rounds gf is the *delayed* gradient stack, so the
+            # recompute runs against the same stale snapshot the contributor
+            # claims — the delay is reproducible from the shared key
+            # schedule, which is what keeps the §4.2 audit sound under
+            # asynchrony (honest-but-stale is never slashed as cheating).
             recomputed = jax.vmap(wire)(wk, gf)
             audited_view = (qsgd_decode_ops.wire_decode(submitted)
                             if fused_qsgd else submitted)
@@ -633,16 +741,19 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
         new_state = SwarmState(
             params=new_params, opt_state=new_opt,
             slashed=state.slashed | caught,
-            contrib=state.contrib + lane.speeds * keep.astype(jnp.float32))
+            contrib=state.contrib + lane.speeds * keep.astype(jnp.float32),
+            ring=ring)
         rec = RoundRecord(
             n_active=jnp.sum(active).astype(jnp.int32),
             n_byzantine=jnp.sum(active & (lane.codes > 0)).astype(jnp.int32),
             caught=caught, keep=keep, agg_norm=agg_norm,
-            consensus_err=consensus_err, coverage=coverage)
+            consensus_err=consensus_err, coverage=coverage,
+            staleness=staleness)
         return new_state, rec
 
     round_fn.fused = fused                    # resolved choice, inspectable
     round_fn.stack_bytes = stack_bytes
+    round_fn.staleness_bound = staleness_bound
     return round_fn
 
 
@@ -665,24 +776,26 @@ def scan_rounds(round_fn: Callable, lane: LaneParams, state: SwarmState,
 def make_scan_program(round_fn: Callable, batch_fn: Callable, rounds: int,
                       eval_fn: Optional[Callable] = None) -> Callable:
     """The batched engine's scanned-run program, with donation declared:
-    ``run(lane, params, opt_state, slashed, contrib) -> (SwarmState,
-    RoundRecord-stacked, final_loss)``.
+    ``run(lane, params, opt_state, slashed, contrib, ring=None) ->
+    (SwarmState, RoundRecord-stacked, final_loss)``.
 
     The engine-owned carry buffers — ``opt_state``, ``slashed``,
-    ``contrib`` — are donated: they are consumed by the scan and handed
-    back as outputs, so XLA can run the whole campaign in place instead of
-    holding a dead copy of the optimizer state for the program's lifetime
-    (at real model sizes the opt state is as large as the params).
+    ``contrib``, and (async rounds) the staleness ``ring`` — are donated:
+    they are consumed by the scan and handed back as outputs, so XLA can
+    run the whole campaign in place instead of holding a dead copy of the
+    optimizer state for the program's lifetime (at real model sizes the
+    opt state is as large as the params, and the ring is K+1 of them).
     ``params`` is deliberately NOT donated: the initial params buffer is
     caller-owned — tests and drivers seed several engines from one
     ``params0`` — and donating it would invalidate the caller's copy.
     ``analysis.jaxpr_audit`` (JX006) checks the declared donation is
     honored in the lowered program."""
-    def run(lane: LaneParams, params, opt_state, slashed, contrib):
+    def run(lane: LaneParams, params, opt_state, slashed, contrib,
+            ring=None):
         state = SwarmState(params=params, opt_state=opt_state,
-                           slashed=slashed, contrib=contrib)
+                           slashed=slashed, contrib=contrib, ring=ring)
         return scan_rounds(round_fn, lane, state, rounds, batch_fn, eval_fn)
-    return jax.jit(run, donate_argnums=(2, 3, 4))
+    return jax.jit(run, donate_argnums=(2, 3, 4, 5))
 
 
 def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
@@ -720,6 +833,12 @@ def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
     more in per-op memory traffic than it saves in compilation (measured
     ~4x slower end-to-end on the small-LM example).
     ``derailment.sweep`` picks this automatically by parameter count.
+
+    Async mode is likewise detected from ``lanes.delays`` (all lanes must
+    agree): the staleness ring is sized to the campaign-wide max delay
+    (static), per-lane delay *values* stay traced — so staleness is one
+    more sweep axis inside the single compiled program, and
+    ``RoundRecord.staleness`` traces each round's mean realized delay.
 
     Custody mode is likewise detected from ``lanes.custody`` (all lanes
     must agree): every round traces ``RoundRecord.coverage`` (the live
@@ -795,21 +914,30 @@ def make_campaign_program(loss_fn: Callable, params0, optimizer,
     n = int(lanes.codes.shape[-1])
     decentralized = lanes.mixing is not None
     has_custody = lanes.custody is not None
+    # async mode is detected from the delays lane like mixing/custody: the
+    # ring is sized to the campaign-wide max delay (static — lane *values*
+    # stay traced, so staleness is a sweep axis within one program).  An
+    # all-zero delays lane sizes the ring to 0 and routes through the
+    # literal synchronous path.
+    staleness_bound = (int(np.max(np.asarray(lanes.delays)))
+                       if lanes.delays is not None else 0)
     round_fn = make_round_fn(
         loss_fn, optimizer, params0, n, aggregator=aggregator,
         agg_kwargs=agg_kwargs, compression_kind=compression_kind,
         compression_kwargs=compression_kwargs, verify=verify,
         decentralized=decentralized, mixing_schedule=mixing_schedule,
-        fused=fused)
+        fused=fused, staleness_bound=staleness_bound)
     if batched_data_fn is None:
         def batch_fn(rnd):
             return jax.vmap(lambda i: data_fn(i, rnd))(jnp.arange(n))
     else:
         batch_fn = batched_data_fn
     if decentralized:
-        state0 = init_decentralized_state(params0, optimizer, n)
+        state0 = init_decentralized_state(params0, optimizer, n,
+                                          staleness_bound=staleness_bound)
     else:
-        state0 = init_state(params0, optimizer, n)
+        state0 = init_state(params0, optimizer, n,
+                            staleness_bound=staleness_bound)
     user_eval = eval_fn
 
     def one_run(lane):
@@ -843,6 +971,7 @@ def history_from_records(recs: RoundRecord, node_ids: Sequence[str], *,
     agg = np.asarray(recs.agg_norm)
     cons = np.asarray(recs.consensus_err)
     cov = np.asarray(recs.coverage)
+    stale = np.asarray(recs.staleness)
     return [{
         "round": start_round + t,
         "n_active": int(n_active[t]),
@@ -851,6 +980,7 @@ def history_from_records(recs: RoundRecord, node_ids: Sequence[str], *,
         "agg_norm": float(agg[t]),
         "consensus_error": float(cons[t]),
         "coverage": float(cov[t]),
+        "staleness": float(stale[t]),
     } for t in range(agg.shape[0])]
 
 
@@ -958,7 +1088,11 @@ class SequentialSwarm(_SwarmBase):
     """Per-node Python-loop engine: the readable reference oracle.
 
     O(N) dispatches per round; use :class:`Swarm` for anything but tests and
-    equivalence checks.
+    equivalence checks.  Bounded staleness (``cfg.staleness_bound > 0``) is
+    supported as the readable twin of the batched ring buffer: a plain dict
+    of the last K+1 params snapshots, per-node delays drawn host-side from
+    the identical ``(seed, _DELAY, round, node)`` key schedule (rounds must
+    then be stepped consecutively from 0 — ``run`` always does).
     """
 
     def __init__(self, loss_fn, params, optimizer, nodes, cfg, data_fn):
@@ -969,6 +1103,7 @@ class SequentialSwarm(_SwarmBase):
         super().__init__(loss_fn, params, optimizer, nodes, cfg, data_fn)
         self._grad = jax.jit(jax.grad(loss_fn))
         self._flat_shapes = None
+        self._snapshots: Dict[int, Any] = {}   # round -> params (async only)
 
     # -- helpers ----------------------------------------------------------------
     def _flatten(self, tree) -> Array:
@@ -992,13 +1127,30 @@ class SequentialSwarm(_SwarmBase):
         if not active:
             raise RuntimeError(f"round {rnd}: no active nodes")
 
-        honest_grads, submitted, metas = [], [], []
+        K = cfg.staleness_bound
+        if K > 0:
+            # the readable ring-buffer twin: snapshot this round's params,
+            # keep the last K+1 — a node drawing delay d gradients against
+            # the params as of the start of round rnd - d
+            self._snapshots[rnd] = self.params
+            for old in [r for r in self._snapshots if r < rnd - K]:
+                del self._snapshots[old]
+
+        honest_grads, submitted, metas, delays = [], [], [], []
         for i, node in active:
             batch = self.data_fn(i, rnd)
-            g = self._grad(self.params, batch)
+            d, p_node = 0, self.params
+            if K > 0:
+                cap = min(node.delay, K, rnd)
+                d = int(jax.random.randint(
+                    _node_key(self._base_key, _DELAY, rnd, i), (), 0,
+                    cap + 1))
+                p_node = self._snapshots[rnd - d]
+            g = self._grad(p_node, batch)
             gf = self._flatten(g)
             honest_grads.append(gf)
-            metas.append((i, node, batch))
+            delays.append(d)
+            metas.append((i, node, batch, p_node))
         honest_mean = jnp.mean(jnp.stack(honest_grads), axis=0)
 
         # corruption + wire compression.  The wire key is part of the shared
@@ -1007,7 +1159,7 @@ class SequentialSwarm(_SwarmBase):
         # with the submitter's key and compares like with like (otherwise
         # honest lossy compression reads as cheating).
         wire_keys = []
-        for gf, (i, node, _) in zip(honest_grads, metas):
+        for gf, (i, node, _, _) in zip(honest_grads, metas):
             if node.byzantine:
                 gf = corrupt(node.byzantine, gf, honest_mean, node.byzantine_scale,
                              _node_key(self._base_key, _CORRUPT, rnd, i))
@@ -1020,16 +1172,20 @@ class SequentialSwarm(_SwarmBase):
         keep = [True] * len(active)
         if cfg.verification:
             v = cfg.verification
-            for j, (i, node, batch) in enumerate(metas):
+            for j, (i, node, batch, p_node) in enumerate(metas):
                 sel = jax.random.uniform(_node_key(self._base_key, _AUDIT_SEL, rnd, i))
                 if float(sel) >= v.p_check:
                     continue
                 # recompute the gradient, re-encode with the submitter's wire
                 # key, and compare flat — audit_flat is the same noise/compare
                 # formula the batched engine vmaps, so both engines reach the
-                # same pass/slash decision even at the tolerance boundary
+                # same pass/slash decision even at the tolerance boundary.
+                # ``p_node`` is the submitter's (possibly stale) snapshot:
+                # the validator replays the delay from the shared key
+                # schedule and audits against the SAME params the
+                # contributor claims — stale-but-honest never slashes.
                 recomputed = self._apply_wire(
-                    self._flatten(self._grad(self.params, batch)), wire_keys[j])
+                    self._flatten(self._grad(p_node, batch)), wire_keys[j])
                 ok, mismatch = audit_flat(
                     submitted[j], recomputed,
                     _node_key(self._base_key, _AUDIT_NOISE, rnd, i), v)
@@ -1048,7 +1204,7 @@ class SequentialSwarm(_SwarmBase):
             agg = jnp.zeros_like(honest_grads[0])  # every update audited out
 
         # mint shares ∝ verified work (speed-weighted) (§4)
-        for (_, node, _), k in zip(metas, keep):
+        for (_, node, _, _), k in zip(metas, keep):
             if k:
                 self.ledger.record_contribution(node.node_id, node.speed)
 
@@ -1060,6 +1216,9 @@ class SequentialSwarm(_SwarmBase):
             "agg_norm": float(jnp.linalg.norm(agg)),
             "consensus_error": 0.0,        # centralized: one shared params
             "coverage": self._coverage_of([i for i, _ in active]),
+            # f32 division so the record equals the batched engine's exactly
+            "staleness": float(np.float32(sum(delays))
+                               / np.float32(max(len(active), 1))),
         }
         self.history.append(rec)
         return rec
@@ -1125,11 +1284,14 @@ class Swarm(_SwarmBase):
             verify=cfg.verification is not None,
             decentralized=self._decentralized,
             mixing_schedule="clamp" if cfg.churn_coupled else "cycle",
-            fused=cfg.fused)
+            fused=cfg.fused, staleness_bound=cfg.staleness_bound)
         if self._decentralized:
             # per-node replicas + per-node optimizer states from round 0
             init = init_decentralized_state(self.params, optimizer, n)
             self.params, self.opt_state = init.params, init.opt_state
+        # the bounded-staleness snapshot ring (None when synchronous) —
+        # engine state like params/opt_state, advanced by every round
+        self._ring = init_ring(self.params, cfg.staleness_bound)
         self._round_fn = jax.jit(functools.partial(self._core, self._lane))
         self._scan_cache: Dict[int, Callable] = {}
         self._batches_traceable: Optional[bool] = None
@@ -1150,7 +1312,8 @@ class Swarm(_SwarmBase):
     def _state(self) -> SwarmState:
         return SwarmState(params=self.params, opt_state=self.opt_state,
                           slashed=jnp.asarray(self._slashed_np),
-                          contrib=jnp.zeros(len(self.nodes), jnp.float32))
+                          contrib=jnp.zeros(len(self.nodes), jnp.float32),
+                          ring=self._ring)
 
     def _can_scan(self, rounds: int) -> bool:
         """Scanned run needs a traceable batch fn and a membership schedule
@@ -1178,6 +1341,7 @@ class Swarm(_SwarmBase):
         batches = self._stack_batches(rnd)
         state, core_rec = self._round_fn(self._state(), rnd, batches)
         self.params, self.opt_state = state.params, state.opt_state
+        self._ring = state.ring
 
         caught_ids = []
         for i in np.flatnonzero(np.asarray(core_rec.caught)):
@@ -1198,6 +1362,7 @@ class Swarm(_SwarmBase):
             "agg_norm": float(core_rec.agg_norm),
             "consensus_error": float(core_rec.consensus_err),
             "coverage": float(core_rec.coverage),
+            "staleness": float(core_rec.staleness),
         }
         self.history.append(rec)
         return rec
@@ -1220,11 +1385,13 @@ class Swarm(_SwarmBase):
                 self._core, self._traced_batch_fn(), rounds)
         was_slashed = self._slashed_np.copy()
         st = self._state()
-        # opt_state/slashed/contrib are donated (make_scan_program) and
+        # opt_state/slashed/contrib/ring are donated (make_scan_program) and
         # reassigned from the outputs below — never read the old buffers
         state, recs, _ = self._scan_cache[rounds](
-            self._lane, st.params, st.opt_state, st.slashed, st.contrib)
+            self._lane, st.params, st.opt_state, st.slashed, st.contrib,
+            st.ring)
         self.params, self.opt_state = state.params, state.opt_state
+        self._ring = state.ring
         # run() numbers rounds from 0 on every call (same as the step loop)
         self.history.extend(history_from_records(
             recs, [n.node_id for n in self.nodes]))

@@ -12,6 +12,7 @@ container's XLA/CPU is deterministic — DESIGN.md §2).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -118,13 +119,33 @@ def honest_value(cost_per_step: float, cfg: VerificationConfig) -> float:
 
 
 def cheating_irrational(gain_per_step: float, cfg: VerificationConfig) -> bool:
-    """The protocol is incentive-secure when cheating has negative EV."""
-    return expected_cheat_value(gain_per_step, cfg) < 0
+    """The protocol is incentive-secure when cheating has non-positive EV.
+
+    The boundary (EV exactly 0) counts as irrational: faking work has
+    strictly positive effort cost the EV formula doesn't price, so zero
+    expected gain already loses to honesty.  This is also what makes
+    :func:`min_p_check`'s "smallest sufficient audit rate" actually
+    sufficient at the boundary instead of one ulp short."""
+    return expected_cheat_value(gain_per_step, cfg) <= 0
 
 
 def min_p_check(gain_per_step: float, stake: float) -> float:
-    """Smallest audit rate making cheating irrational for a given stake."""
-    return min(1.0, gain_per_step / max(stake, 1e-12))
+    """Smallest audit rate making cheating irrational for a given stake.
+
+    Guaranteed sufficient *in floating point*: the quotient
+    ``gain / stake`` is nudged up by ulps until ``p * stake >= gain``
+    (division and multiplication each round, so the raw quotient can land
+    a hair below break-even), hence
+    ``cheating_irrational(gain, VerificationConfig(p_check=p, stake=s))``
+    holds for the returned ``p`` whenever any rate <= 1 suffices —
+    property-tested over random (gain, stake) in tests/test_properties.py.
+    Non-positive gain needs no auditing at all (rate 0)."""
+    if gain_per_step <= 0.0:
+        return 0.0
+    p = gain_per_step / max(stake, 1e-12)
+    while 0.0 < p < 1.0 and p * stake < gain_per_step:
+        p = math.nextafter(p, 1.0)
+    return min(1.0, p)
 
 
 def validator_ev(cost_of_audit: float, p_cheater: float, cfg: VerificationConfig) -> float:

@@ -4,7 +4,7 @@ Every rule code gets a minimal *firing* snippet and a minimal *quiet*
 snippet, so the rule catalog can neither rot (a rule that stops firing
 fails here first) nor creep (a rule that starts over-firing fails the
 quiet twin).  The integration test at the bottom is the gate itself: the
-five engine programs and seven kernels must audit clean at HEAD.
+six engine programs and seven kernels must audit clean at HEAD.
 
 Run standalone with ``pytest -m analysis``; included in tier-1.
 """
@@ -361,14 +361,15 @@ def test_rule_catalog_is_complete():
 
 # ============================ the gate itself =================================
 def test_engine_programs_and_kernels_violation_free():
-    """The integration gate: the five engine programs (14 traced variants),
+    """The integration gate: the six engine programs (20 traced variants),
     all seven kernels, and the whole source tree audit clean at HEAD
     (modulo the checked-in baseline, empty at HEAD)."""
     from repro.analysis.__main__ import build_report
     report = build_report()
     report.apply_baseline(load_baseline())
     assert set(report.summary["programs"]) == {
-        "round_unfused", "round_fused", "campaign", "sweep", "serve_step"}
+        "round_unfused", "round_fused", "round_async", "campaign", "sweep",
+        "serve_step"}
     assert len(report.summary["kernels"]) == 7
     assert sum(report.summary["kernels"].values()) >= 7
     assert report.ok, "\n".join(

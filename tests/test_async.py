@@ -1,0 +1,252 @@
+"""Bounded-staleness async rounds: oracle contracts, determinism, sweeps.
+
+The async engine's correctness story has four pins:
+
+1. ``staleness_bound=0`` routes through the LITERAL synchronous code path,
+   so it is bit-exact with the pre-async engine by construction — pinned
+   here anyway (params and every RoundRecord counter, through churn +
+   audits + corruption), the same way FC-decentralized pins centralized.
+2. K > 0: the batched ring-buffer engine equals the ``SequentialSwarm``
+   oracle (a plain dict of the last K+1 snapshots, host-side delay draws
+   from the identical key schedule) — counters and realized staleness
+   exactly, aggregates to vmap-reduction tolerance.
+3. Histories are a pure function of ``(seed, delay schedule)``, and a
+   campaign lane reproduces the single-run ``Swarm`` (lane stacking is
+   invariant).  The hypothesis twin lives in ``test_properties.py``.
+4. The staleness axis of ``derailment.sweep`` reproduces single-point
+   ``simulate_derailment(staleness_bound=K)`` runs, and audits recompute
+   against the claimed stale snapshot — staleness alone never slashes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.derailment import simulate_derailment, sweep
+from repro.core.scenarios import (
+    SweepGrid,
+    get_scenario,
+    get_sweep_grid,
+    scenario_campaign,
+)
+from repro.core.swarm import (
+    NodeSpec,
+    SwarmConfig,
+    history_from_records,
+    make_swarm,
+)
+from repro.core.verification import VerificationConfig
+from repro.optim.optimizer import SGD
+
+from conftest import tiny_quadratic_problem
+
+_VERIF = VerificationConfig(p_check=0.5, stake=5.0, tolerance=1e-3,
+                            jackpot=5.0)
+
+
+def _roster(delays=(0, 2, 3, 3, 1)):
+    """Churn + audits + corruption + heterogeneous speed in 5 nodes — every
+    code path the round serves, with per-node staleness caps."""
+    return [
+        NodeSpec("h0", delay=delays[0]),
+        NodeSpec("h1", delay=delays[1]),
+        NodeSpec("h2", speed=2.0, delay=delays[2]),
+        NodeSpec("adv0", byzantine="sign_flip", byzantine_scale=5.0,
+                 delay=delays[3]),
+        NodeSpec("ch0", join_round=2, leave_round=9, delay=delays[4]),
+    ]
+
+
+def _build(cfg, engine="batched", delays=(0, 2, 3, 3, 1)):
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem()
+    opt = SGD(lr=0.1, momentum=0.0)
+    return make_swarm(loss_fn, params0, opt, _roster(delays), cfg, data_fn,
+                      engine=engine)
+
+
+def _flat(params):
+    return np.concatenate([np.asarray(l).reshape(-1)
+                           for l in jax.tree.leaves(params)])
+
+
+# ------------------- pin 1: K=0 == the synchronous engine ----------------------
+def test_staleness_zero_bit_exact_vs_sync():
+    """staleness_bound=0 IS the synchronous engine: node delay fields are
+    not read, the ring is not traced, params and every record counter are
+    bit-identical through churn, audits and corruption."""
+    a = _build(SwarmConfig(aggregator="centered_clip", verification=_VERIF,
+                           staleness_bound=0, seed=0))
+    b = _build(SwarmConfig(aggregator="centered_clip", verification=_VERIF,
+                           seed=0), delays=(0, 0, 0, 0, 0))
+    a.run(10)
+    b.run(10)
+    assert a.history == b.history           # bit-exact, staleness included
+    assert all(h["staleness"] == 0.0 for h in a.history)
+    np.testing.assert_array_equal(_flat(a.params), _flat(b.params))
+
+
+# ------------------- pin 2: batched ring == sequential oracle ------------------
+def test_async_batched_equals_sequential_oracle():
+    K = 3
+    cfg = SwarmConfig(aggregator="centered_clip", verification=_VERIF,
+                      staleness_bound=K, seed=0)
+    bat = _build(cfg)
+    seq = _build(cfg, engine="sequential")
+    for rnd in range(12):
+        rb, rs = bat.step(rnd), seq.step(rnd)
+        for k in ("n_active", "n_byzantine", "caught"):
+            assert rb[k] == rs[k], (rnd, k, rb[k], rs[k])
+        # realized delays come from the SAME (seed, _DELAY, round, node)
+        # schedule on both engines — the mean matches exactly in f32
+        assert rb["staleness"] == rs["staleness"], rnd
+        np.testing.assert_allclose(rb["agg_norm"], rs["agg_norm"],
+                                   rtol=2e-3, atol=1e-4)
+    np.testing.assert_allclose(_flat(bat.params), _flat(seq.params),
+                               rtol=1e-4, atol=1e-5)
+    assert sorted(bat.slashed) == sorted(seq.slashed)
+
+
+def test_async_audit_recomputes_against_claimed_snapshot():
+    """§4.2 soundness under staleness: the validator recomputes from the
+    SAME delayed snapshot the contributor used (the delay is part of the
+    claim), so honest-but-stale nodes are never slashed — only the
+    corrupting attacker is."""
+    K = 3
+    cfg = SwarmConfig(aggregator="centered_clip",
+                      verification=VerificationConfig(
+                          p_check=1.0, stake=5.0, tolerance=1e-3,
+                          jackpot=5.0),
+                      staleness_bound=K, seed=0)
+    for engine in ("batched", "sequential"):
+        sw = _build(cfg, engine=engine)
+        sw.run(10)
+        assert any(h["staleness"] > 0 for h in sw.history), engine
+        # p_check=1 audits every node every round: with the stale-snapshot
+        # recompute, only the sign-flipper can be caught
+        assert set(sw.slashed) <= {"adv0"}, engine
+        assert "adv0" in sw.slashed, engine
+
+
+# ------------------- pin 3: determinism + lane stacking ------------------------
+def test_async_history_deterministic_in_seed_and_delays():
+    K = 3
+    cfg = SwarmConfig(aggregator="centered_clip", staleness_bound=K, seed=0)
+    a, b = _build(cfg), _build(cfg)
+    a.run(8)
+    b.run(8)
+    assert a.history == b.history           # same (seed, delays): identical
+    np.testing.assert_array_equal(_flat(a.params), _flat(b.params))
+    # a different delay schedule (same seed) realizes different staleness
+    c = _build(cfg, delays=(3, 3, 3, 3, 3))
+    c.run(8)
+    assert [h["staleness"] for h in c.history] != \
+        [h["staleness"] for h in a.history]
+    # a different seed redraws the delays too
+    d = _build(SwarmConfig(aggregator="centered_clip", staleness_bound=K,
+                           seed=1))
+    d.run(8)
+    assert [h["staleness"] for h in d.history] != \
+        [h["staleness"] for h in a.history]
+
+
+def test_async_scan_equals_step_loop():
+    """The scanned async run (ring donated through lax.scan) is bit-exact
+    with the eager step loop."""
+    K = 2
+    cfg = SwarmConfig(aggregator="centered_clip", verification=_VERIF,
+                      staleness_bound=K, seed=0)
+    scanned, stepped = _build(cfg), _build(cfg)
+    scanned.run(10)
+    for rnd in range(10):
+        stepped.step(rnd)
+    assert scanned.history == stepped.history
+    np.testing.assert_array_equal(_flat(scanned.params),
+                                  _flat(stepped.params))
+
+
+def test_async_staleness_records_bounded():
+    K = 2
+    sw = _build(SwarmConfig(aggregator="mean", staleness_bound=K, seed=0),
+                delays=(2, 2, 2, 2, 2))
+    sw.run(10)
+    stale = [h["staleness"] for h in sw.history]
+    assert stale[0] == 0.0                  # round 0 has no older snapshot
+    assert all(0.0 <= s <= K for s in stale)
+    assert any(s > 0 for s in stale)
+
+
+@pytest.mark.parametrize("scenario", [
+    "straggler_majority",
+    "stale_poisoning",
+    "async_churn",
+])
+def test_async_campaign_lane_matches_single_run_swarm(scenario):
+    """Lane-stacking invariance: each lane of an async scenario campaign
+    reproduces the single-run Swarm for the same (scenario, seed) — the
+    test_campaign.py contract extended to the staleness axis."""
+    rounds, seeds = 10, (0, 1)
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    state, recs, _, node_ids, cfg = scenario_campaign(
+        scenario, loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn,
+        n_nodes=8, seeds=seeds, rounds=rounds)
+    for k, seed in enumerate(seeds):
+        swarm = get_scenario(scenario).build_swarm(
+            loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn,
+            n_nodes=8, seed=seed)
+        for r in range(rounds):
+            swarm.step(r)
+        hist = history_from_records(
+            jax.tree.map(lambda x: x[k], recs), node_ids)
+        for key in ("n_active", "n_byzantine", "caught", "staleness"):
+            assert [h[key] for h in hist] == \
+                [h[key] for h in swarm.history], (scenario, seed, key)
+        np.testing.assert_allclose(
+            [h["agg_norm"] for h in hist],
+            [h["agg_norm"] for h in swarm.history],
+            rtol=2e-3, atol=1e-5, err_msg=f"{scenario} seed {seed}")
+
+
+# ------------------- pin 4: the staleness sweep axis ---------------------------
+def _quad_sweep(grid, **kw):
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    eval_fn = lambda p: loss_fn(p, data_fn(0, 10_000))
+    return (sweep(loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn,
+                  eval_fn, grid, **kw),
+            (loss_fn, params0, data_fn, eval_fn))
+
+
+def test_async_sweep_smoke_grid():
+    """The registered staleness-axis smoke grid runs as ONE program with
+    per-bound baselines, and the phase table grows s=K rows."""
+    grid = get_sweep_grid("no_off_async_smoke")
+    res, _ = _quad_sweep(grid)
+    assert res.n_programs == 1
+    assert len(res.results) == grid.n_points == 4
+    assert res.n_runs == grid.n_lanes == 6      # 4 cells + 2 baselines
+    assert {r.staleness_bound for r in res.results} == {0, 2}
+    assert all(np.isfinite(r.final_loss) and np.isfinite(r.baseline_loss)
+               for r in res.results)
+    table = res.phase_table()
+    assert "s=0" in table and "s=2" in table
+
+
+def test_async_sweep_lane_equals_simulate_derailment():
+    """A staleness-axis sweep cell reproduces the single-point
+    ``simulate_derailment(staleness_bound=K)`` run (same key schedule,
+    same ring semantics — the single run's ring has the same K because the
+    grid carries one bound)."""
+    grid = SweepGrid(
+        name="tiny_async", description="", n_honest=6,
+        attacker_counts=(1, 3), seeds=(0,), rounds=10,
+        staleness_bounds=(2,),
+        regimes=get_sweep_grid("no_off_smoke").regimes)
+    res, (loss_fn, params0, data_fn, eval_fn) = _quad_sweep(grid)
+    for r in res.results:
+        single = simulate_derailment(
+            loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn, eval_fn,
+            n_honest=6, n_attack=r.n_attackers, rounds=10,
+            aggregator=r.aggregator, seed=r.seed, staleness_bound=2,
+            baseline_loss=r.baseline_loss)
+        np.testing.assert_allclose(r.final_loss, single.final_loss,
+                                   rtol=2e-3, err_msg=str(r))
+        assert r.derailed == single.derailed

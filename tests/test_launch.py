@@ -182,6 +182,31 @@ def test_checkpoint_roundtrip(tiny_model, tmp_path):
         np.asarray(a), np.asarray(b)), params, restored)
 
 
+def test_checkpoint_restore_validates_dtypes(tmp_path):
+    """restore validates manifest dtypes against the template like shapes:
+    an fp32 checkpoint restored into a bf16 template is an ERROR naming
+    the offending key, not a silent precision change.  (bf16 checkpoints
+    themselves can't serialize — np.savez has no bf16 cast — so the
+    mismatch is probed from the fp32-on-disk side.)"""
+    from repro.checkpoint import checkpoint as ckpt
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "opt": {"m": jnp.zeros((4,), jnp.float32)}}
+    path = str(tmp_path / "ck")
+    ckpt.save(path, tree, step=1)
+    restored = ckpt.restore(path, tree)     # matching template: exact
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), tree, restored)
+    with pytest.raises(ValueError, match="dtype mismatch for w"):
+        ckpt.restore(path, {"w": tree["w"].astype(jnp.bfloat16),
+                            "opt": tree["opt"]})
+    with pytest.raises(ValueError, match="dtype mismatch for opt/m"):
+        ckpt.restore(path, {"w": tree["w"],
+                            "opt": {"m": tree["opt"]["m"].astype(jnp.bfloat16)}})
+    with pytest.raises(ValueError, match="shape mismatch for w"):
+        ckpt.restore(path, {"w": jnp.zeros((3, 2), jnp.float32),
+                            "opt": tree["opt"]})
+
+
 def test_custody_checkpoint_enforces_coverage(tiny_model, tmp_path):
     cfg, model, params = tiny_model
     from repro.checkpoint import checkpoint as ckpt

@@ -19,7 +19,7 @@ pytest.importorskip(
 from hypothesis import assume, given, settings
 from hypothesis import strategies as st
 
-from repro.core import aggregation, compression
+from repro.core import aggregation, compression, verification
 from repro.core import unextractable as unext
 from repro.core.ledger import Ledger
 from repro.core.unextractable import ShardCustody
@@ -82,6 +82,77 @@ def test_property_qsgd_error_bounded(size, seed):
     err = float(jnp.linalg.norm(y - x))
     bound = (np.sqrt(size) / levels) * float(jnp.linalg.norm(x)) * 3 + 1e-6
     assert err <= bound
+
+
+# =============================== verification ==================================
+@settings(max_examples=300, deadline=None)
+@given(st.floats(-10.0, 1e6, allow_nan=False, allow_infinity=False),
+       st.floats(1e-12, 1e6, allow_nan=False, allow_infinity=False))
+def test_property_min_p_check_makes_cheating_irrational(gain, stake):
+    """The audit-rate boundary contract over arbitrary (gain, stake): the
+    returned rate is in [0, 1] and — whenever any rate <= 1 can suffice —
+    actually makes cheating irrational, float rounding included (the EV==0
+    boundary counts as irrational; min_p_check nudges the quotient up by
+    ulps until p * stake >= gain)."""
+    p = verification.min_p_check(gain, stake)
+    assert 0.0 <= p <= 1.0
+    if gain <= 0.0:
+        assert p == 0.0
+    if p < 1.0:
+        assert verification.cheating_irrational(
+            gain, verification.VerificationConfig(p_check=p, stake=stake))
+
+
+# ============================== async swarm ====================================
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**16),
+       st.lists(st.integers(0, 3), min_size=5, max_size=5))
+def test_property_async_history_deterministic_and_stack_invariant(seed,
+                                                                  delays):
+    """Bounded-staleness histories are a pure function of (seed, delay
+    schedule), and a lane keeps its history when stacked into a wider
+    campaign (sweep lane == single run)."""
+    from conftest import tiny_quadratic_problem
+    from repro.core.swarm import (NodeSpec, SwarmConfig, history_from_records,
+                                  lane_for_nodes, run_campaign, stack_lanes)
+    from repro.optim.optimizer import SGD
+
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    opt = SGD(lr=0.1, momentum=0.0)
+    K = 3
+    nodes = [NodeSpec(f"h{i}", delay=d) for i, d in enumerate(delays[:-1])]
+    nodes.append(NodeSpec("adv", byzantine="sign_flip", byzantine_scale=5.0,
+                          delay=delays[-1]))
+    cfg = SwarmConfig(aggregator="centered_clip", staleness_bound=K,
+                      seed=seed)
+    lane = lane_for_nodes(nodes, cfg)
+    ids = [n.node_id for n in nodes]
+
+    hists = []
+    for _ in range(2):      # determinism: identical inputs, identical run
+        _, recs, _ = run_campaign(loss_fn, params0, opt, data_fn,
+                                  stack_lanes([lane]), rounds=6,
+                                  aggregator="centered_clip")
+        hists.append(history_from_records(
+            jax.tree.map(lambda x: x[0], recs), ids))
+    assert hists[0] == hists[1]
+
+    # stacking: the same lane next to a different-delay, different-seed
+    # lane keeps counters and realized staleness exactly (floats to vmap
+    # tolerance)
+    other = lane_for_nodes(
+        [NodeSpec(f"o{i}", delay=(i + 1) % (K + 1)) for i in range(len(ids))],
+        SwarmConfig(aggregator="centered_clip", staleness_bound=K,
+                    seed=seed + 1))
+    _, recs, _ = run_campaign(loss_fn, params0, opt, data_fn,
+                              stack_lanes([lane, other]), rounds=6,
+                              aggregator="centered_clip")
+    stacked = history_from_records(jax.tree.map(lambda x: x[0], recs), ids)
+    for key in ("n_active", "n_byzantine", "caught", "staleness"):
+        assert [h[key] for h in stacked] == [h[key] for h in hists[0]], key
+    np.testing.assert_allclose([h["agg_norm"] for h in stacked],
+                               [h["agg_norm"] for h in hists[0]],
+                               rtol=1e-5, atol=1e-7)
 
 
 # ================================= ledger ======================================

@@ -311,6 +311,32 @@ def test_cheating_economics():
     assert verification.min_p_check(1.0, 10.0) == pytest.approx(0.1)
 
 
+def test_min_p_check_makes_cheating_irrational():
+    """The documented contract: the 'smallest audit rate making cheating
+    irrational' actually does — including at the EV == 0 boundary (counts
+    as irrational: faking work has unpriced effort cost) and under float
+    rounding (min_p_check nudges the quotient up by ulps until
+    p * stake >= gain).  Seeded random sweep; the hypothesis twin lives in
+    test_properties.py."""
+    # the exact boundary: p * stake == gain -> EV == 0 -> irrational
+    cfg = verification.VerificationConfig(p_check=0.1, stake=10.0)
+    assert verification.expected_cheat_value(1.0, cfg) == 0.0
+    assert verification.cheating_irrational(1.0, cfg)
+    # non-positive gain needs no auditing
+    assert verification.min_p_check(0.0, 10.0) == 0.0
+    assert verification.min_p_check(-3.0, 10.0) == 0.0
+    rng = np.random.default_rng(0)
+    for _ in range(2000):
+        gain = float(rng.uniform(-2.0, 50.0))
+        stake = float(rng.uniform(1e-9, 100.0))
+        p = verification.min_p_check(gain, stake)
+        assert 0.0 <= p <= 1.0
+        if p < 1.0:     # any sufficient rate <= 1 exists -> p must suffice
+            assert verification.cheating_irrational(
+                gain, verification.VerificationConfig(p_check=p, stake=stake)
+            ), (gain, stake, p)
+
+
 # ================================= ledger ======================================
 
 
@@ -377,6 +403,29 @@ def test_ledger_slash_burns():
     assert lost == pytest.approx(7.0)
     assert not led.can_infer("evil")
     assert led.check_conservation()
+
+
+def test_ledger_slash_unknown_node_is_noop():
+    """Slashing a node the ledger has never seen records NOTHING: no
+    phantom ("slash", node, 0.0) event may enter the audit trail for a
+    participant that never staked or contributed."""
+    led = Ledger()
+    led.record_contribution("a", 3.0)
+    led.stake("a", 5.0)
+    before = list(led.history)
+    assert led.slash("ghost") == 0.0
+    assert led.history == before
+    assert led.burned == 0.0 and led.burned_stake == 0.0
+    assert "ghost" not in led.balances and "ghost" not in led.stakes
+    assert led.check_conservation()
+    # a node with ONLY a stake (no shares yet) is still slashable
+    led.stake("b", 2.0)
+    assert led.slash("b") == pytest.approx(2.0)
+    assert led.history[-1] == ("slash", "b", 2.0)
+    # and a second slash of the now-gone node is again a no-op
+    n_events = len(led.history)
+    assert led.slash("b") == 0.0
+    assert len(led.history) == n_events
 
 
 # ============================ unextractability =================================

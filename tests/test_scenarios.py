@@ -252,6 +252,7 @@ def test_registry_has_the_documented_scenarios():
         "high_churn_elastic", "heterogeneous_speed", "compressed_wire",
         "audit_heavy", "derailment_stress",
         "gossip_ring_honest", "byzantine_neighborhood", "partitioned_swarm",
+        "straggler_majority", "stale_poisoning", "async_churn",
         "custody_leech", "custody_churn_collapse",
     }
 

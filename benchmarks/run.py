@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   §4.1 serving           scanned decode + continuous batching vs the loop
                          driver + the (load x churn x redundancy) sweep
   §5.5 derailment        no-off frontier + attack economics
+  §4   economy           incentive phase diagram + the adaptivity gap
   §3   async             bounded-staleness rounds/s vs sync + straggler util
   §3.3 round_fused       fused Pallas round path vs per-op jnp, rounds/s
   (g)  roofline          per arch x shape terms from the dry-run artifacts
@@ -35,6 +36,7 @@ MODULES = [
     "bench_custody",
     "bench_serving",
     "bench_derailment",
+    "bench_economy",
     "bench_async",
     "bench_round_fused",
     "bench_roofline",

@@ -3,7 +3,7 @@
 This module builds the *real* entry-point programs of the engine (the same
 builders ``run_campaign`` / ``derailment.sweep`` / ``ServingEngine`` execute
 — not reimplementations that could drift) against tiny probe problems, and
-hands ``jaxpr_audit`` their :class:`jax.core.ClosedJaxpr`.  Six programs:
+hands ``jaxpr_audit`` their :class:`jax.core.ClosedJaxpr`.  Seven programs:
 
 ``round_unfused`` / ``round_fused``
     ``swarm.make_round_fn`` in both hot-path modes, plus the scanned-run
@@ -23,6 +23,12 @@ hands ``jaxpr_audit`` their :class:`jax.core.ClosedJaxpr`.  Six programs:
     ``derailment.build_sweep_lanes`` feeding ``make_campaign_program`` —
     the multi-aggregator fused phase-diagram program, with two grids
     differing only in seed/scale values (one fingerprint group).
+``economy``
+    the incentive phase diagram: ``build_sweep_lanes`` over economy axes
+    (identity cost / fee / reward schedule / fixed-vs-adaptive) feeding
+    ``make_campaign_program`` — knob-value-variant grids share one
+    fingerprint, and the scanned economy run donates the ``EconState``
+    carry next to opt_state.
 ``serve_step``
     ``ServingEngine.program`` — the custody-gated continuous-batching
     scan, vmapped over a stacked lane campaign, with load / churn lane
@@ -42,7 +48,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import derailment, serving, swarm
+from repro.core import derailment, economy, serving, swarm
+from repro.core.economy import EconomyConfig
 from repro.core.placement import MeshPlan
 from repro.core.scenarios import Regime, SweepGrid
 from repro.core.swarm import NodeSpec, SwarmConfig
@@ -319,6 +326,67 @@ def build_round_async() -> TracedProgram:
 
 
 # ---------------------------------------------------------------------------
+# economy program (incentive phase diagram)
+# ---------------------------------------------------------------------------
+def _econ_grid(seed: int, icost: float, fee: float) -> SweepGrid:
+    return SweepGrid(
+        name=f"audit_econ_{seed}",
+        description="tiny incentive-axis probe grid for the static audit",
+        regimes=(Regime("mean+audit", "mean",
+                        verification=VerificationConfig(p_check=0.5)),),
+        n_honest=3, attacker_counts=(1,), seeds=(seed,), scales=(2.0,),
+        rounds=2, identity_costs=(icost,), fees=(fee,),
+        reward_schedules=((0.1, 5.0),), adaptive=(False, True))
+
+
+def build_economy() -> TracedProgram:
+    """The economy campaign (incentive axes as traced lane data): every
+    knob — identity cost, fee income, reward schedule, jackpot, and the
+    fixed-vs-adaptive switch — rides in ``EconParams``, so probe grids that
+    differ only in knob *values* must share one retrace fingerprint
+    (JX007), and the scanned economy run donates the ``EconState`` carry
+    (stakes, balances, escrow, pool/income counters) next to opt_state
+    through the scan (JX006)."""
+    n = 4
+    params, loss_fn, data_fn, eval_fn = _tiny_problem()
+    opt = SGD(lr=0.05)
+
+    units = []
+    fn = None
+    for label, (seed, icost, fee) in (("base", (0, 1.0, 1.0)),
+                                      ("shifted", (1, 8.0, 0.25))):
+        spec = derailment.build_sweep_lanes(_econ_grid(seed, icost, fee),
+                                            rounds=2)
+        if fn is None:
+            fn = swarm.make_campaign_program(
+                loss_fn, params, opt, data_fn, swarm.stack_lanes(spec.lanes),
+                rounds=2, aggregator=spec.aggregator,
+                agg_kwargs=spec.agg_kwargs, verify=spec.verify,
+                eval_fn=eval_fn)
+        closed = jax.make_jaxpr(fn)(swarm.stack_lanes(spec.lanes))
+        units.append(TracedUnit(label, closed, group="campaign_economy"))
+
+    # the scanned economy run donates the EconState carry next to
+    # opt_state + slashed + contrib — one aliased output per donated leaf
+    cfg = SwarmConfig(verification=VerificationConfig(p_check=0.5),
+                      economy=EconomyConfig(adaptive=True))
+    lane = swarm.lane_for_nodes(_roster(n, attack=True), cfg)
+    round_fn = swarm.make_round_fn(loss_fn, opt, params, n,
+                                   aggregator="mean", verify=True)
+    batch_fn = _batch_fn(data_fn, n)
+    state0 = swarm.init_state(params, opt, n,
+                              econ=economy.init_econ_state(lane.econ, n))
+    scan_fn = swarm.make_scan_program(round_fn, batch_fn, rounds=3)
+    lowered = scan_fn.lower(lane, state0.params, state0.opt_state,
+                            state0.slashed, state0.contrib, state0.ring,
+                            state0.econ).as_text()
+    min_aliases = (len(jax.tree.leaves(state0.opt_state)) + 2
+                   + len(jax.tree.leaves(state0.econ)))
+    return TracedProgram("economy", units,
+                         donations=[DonationUnit("scan", lowered, min_aliases)])
+
+
+# ---------------------------------------------------------------------------
 # serving program (custody-gated continuous batching)
 # ---------------------------------------------------------------------------
 def _serve_lane(custody: np.ndarray, steps: int, variant: str):
@@ -366,6 +434,7 @@ PROGRAM_BUILDERS: Dict[str, Callable[[], TracedProgram]] = {
     "round_async": build_round_async,
     "campaign": build_campaign,
     "sweep": build_sweep,
+    "economy": build_economy,
     "serve_step": build_serve_step,
 }
 

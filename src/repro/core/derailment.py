@@ -24,15 +24,17 @@ per-lane aggregator id and traced audit rate).
 from __future__ import annotations
 
 import functools
+import itertools
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import topology, unextractable
+from repro.core import economy, topology, unextractable
+from repro.core.economy import EconomyConfig, EconomyResult, EconParams
 from repro.core.placement import MeshPlan
 from repro.core.scenarios import Regime, SweepGrid
 from repro.core.swarm import (
@@ -191,10 +193,22 @@ class SweepResult:
     n_runs: int
     wall_s: float
     n_devices: int = 1          # devices the sweep's mesh plan spanned
+    econ_results: List[EconomyResult] = field(default_factory=list)
 
     @property
     def runs_per_s(self) -> float:
         return self.n_runs / max(self.wall_s, 1e-9)
+
+    def economy_phase_table(self, regime: str, *, adaptive: bool = False) -> str:
+        """The §4 incentive phase diagram (identity cost rows × fee
+        columns, S/D/C cells) — see :func:`economy.phase_table`."""
+        return economy.phase_table(self.econ_results, regime=regime,
+                                   adaptive=adaptive)
+
+    def economy_adaptive_gap(self) -> Dict[str, float]:
+        """The fixed-vs-adaptive gap over matched economy cells — see
+        :func:`economy.adaptive_gap`."""
+        return economy.adaptive_gap(self.econ_results)
 
     def phase_table(self) -> str:
         """The §5.5 phase diagram: derailed-seed counts per (regime [,
@@ -288,7 +302,8 @@ def _sweep_lane(n_total: int, n_honest: int, count: int, code: int,
                 leaves: Optional[np.ndarray] = None,
                 custody: Optional[np.ndarray] = None,
                 coalition: Optional[np.ndarray] = None,
-                delays: Optional[np.ndarray] = None) -> LaneParams:
+                delays: Optional[np.ndarray] = None,
+                econ: Optional[EconParams] = None) -> LaneParams:
     """One run lane: honest nodes first, ``count`` attackers, then padding
     that never joins (all regimes share a fixed N so they vmap together).
     Node indices — and therefore the fold_in key schedule — match the
@@ -308,7 +323,10 @@ def _sweep_lane(n_total: int, n_honest: int, count: int, code: int,
     extraction-coalition mask (padding rows hold nothing / join nothing).
     ``delays`` (async sweeps) is this lane's (n_total,) per-node staleness
     cap — a *traced* lane, so every bound of the staleness axis shares the
-    one program compiled for the max bound's snapshot ring."""
+    one program compiled for the max bound's snapshot ring.  ``econ``
+    (economy sweeps) is this lane's traced :class:`EconParams` — every
+    incentive knob (and the adaptive flag) is lane data, so the whole
+    incentive grid shares one program too."""
     codes = np.zeros(n_total, np.int32)
     codes[n_honest:n_honest + count] = code
     scales = np.full(n_total, 10.0, np.float32)     # NodeSpec default
@@ -325,6 +343,7 @@ def _sweep_lane(n_total: int, n_honest: int, count: int, code: int,
         custody=custody,
         coalition=coalition,
         delays=delays,
+        econ=econ,
         base_key=_seed_key(seed),
         p_check=np.float32(v.p_check if v else 0.0),
         tolerance=np.float32(v.tolerance if v else 1.0),
@@ -426,6 +445,33 @@ def build_sweep_lanes(grid: SweepGrid, *,
         d[:n_honest + count] = bound
         return d
 
+    # the economy axes (§4): identity cost, fee inflow, reward schedule and
+    # the adaptive flag all ride inside the traced EconParams lane, so the
+    # whole incentive grid shares the one program.  The lane's attacker
+    # slots double as the strategic coalition, funded from one grid-level
+    # capital budget (the Sybil identity count is derived in-program);
+    # baseline lanes carry the first knob combo with an empty coalition —
+    # fee/reward flows never touch gradients, so one baseline per
+    # (topology, staleness bound, seed) still serves every economy cell.
+    has_econ = grid.has_economy
+    icosts = (grid.identity_costs or (1.0,)) if has_econ else (None,)
+    efees = (grid.fees or (1.0,)) if has_econ else (None,)
+    scheds = (grid.reward_schedules or ((0.1, 5.0),)) if has_econ else (None,)
+    adapts = (grid.adaptive or (False,)) if has_econ else (None,)
+
+    @functools.lru_cache(maxsize=None)
+    def econ_for(icost, fee, sched, adp, count) -> Optional[EconParams]:
+        if not has_econ:
+            return None
+        coal = np.zeros(n_total, bool)
+        coal[n_honest:n_honest + count] = True
+        return EconomyConfig(
+            identity_cost=icost, budget=grid.econ_budget,
+            min_stake=grid.econ_min_stake, fee_income=fee,
+            reward_rate=sched[0], op_cost=grid.econ_op_cost,
+            jackpot=sched[1], honest_reserve=grid.econ_reserve,
+            adaptive=adp).params_for(coal)
+
     @functools.lru_cache(maxsize=None)
     def custody_for(red: int, count: int) -> Optional[np.ndarray]:
         if not has_custody:
@@ -464,25 +510,33 @@ def build_sweep_lanes(grid: SweepGrid, *,
         return lv
 
     lanes, metas = [], []
+    econ_combos = list(itertools.product(icosts, efees, scheds, adapts))
     for reg in grid.regimes:
         aid = agg_index[(reg.aggregator, tuple(sorted(reg.agg_kwargs.items())))]
         for topo in topos:
             for sbound in sbounds:
                 for red in reds:
                     for cfrac in cfracs:
-                        for count in grid.attacker_counts:
-                            for scale in grid.scales:
-                                for seed in grid.seeds:
-                                    lanes.append(_sweep_lane(
-                                        n_total, n_honest, count, code, scale,
-                                        seed, reg.verification, aid,
-                                        traced_kw(count), mixing=mixings[topo],
-                                        leaves=leaves_for(seed),
-                                        custody=custody_for(red, count),
-                                        coalition=coalition_for(cfrac, count),
-                                        delays=delays_for(sbound, count)))
-                                    metas.append((reg, topo, sbound, red,
-                                                  cfrac, count, scale, seed))
+                        for icost, fee, sched, adp in econ_combos:
+                            for count in grid.attacker_counts:
+                                for scale in grid.scales:
+                                    for seed in grid.seeds:
+                                        lanes.append(_sweep_lane(
+                                            n_total, n_honest, count, code,
+                                            scale, seed, reg.verification,
+                                            aid, traced_kw(count),
+                                            mixing=mixings[topo],
+                                            leaves=leaves_for(seed),
+                                            custody=custody_for(red, count),
+                                            coalition=coalition_for(cfrac,
+                                                                    count),
+                                            delays=delays_for(sbound, count),
+                                            econ=econ_for(icost, fee, sched,
+                                                          adp, count)))
+                                        metas.append((reg, topo, sbound, red,
+                                                      cfrac, count, scale,
+                                                      seed, icost, fee,
+                                                      sched, adp))
     for topo in topos:                  # baseline lanes (count = 0), shared
         for sbound in sbounds:          # per (topology, staleness bound,
             for seed in grid.seeds:     # seed) — async baselines run at the
@@ -492,8 +546,10 @@ def build_sweep_lanes(grid: SweepGrid, *,
                     mixing=mixings[topo], leaves=leaves_for(seed),  # not
                     custody=custody_for(reds[0], 0),        # the asynchrony
                     coalition=coalition_for(0.0, 0),
-                    delays=delays_for(sbound, 0)))
-                metas.append((None, topo, sbound, reds[0], 0.0, 0, 0.0, seed))
+                    delays=delays_for(sbound, 0),
+                    econ=econ_for(icosts[0], efees[0], scheds[0], False, 0)))
+                metas.append((None, topo, sbound, reds[0], 0.0, 0, 0.0, seed,
+                              icosts[0], efees[0], scheds[0], False))
 
     def coalition_coverage(red, cfrac, count) -> float:
         cov = custody_for(red, count) & coalition_for(cfrac, count)[:, None]
@@ -572,12 +628,13 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
 
     results_raw = []
     baselines: Dict[Tuple[str, int, int], float] = {}
-    for j, (reg, topo, sb, red, cfrac, count, scale, seed) in enumerate(spec.metas):
+    for j, (reg, topo, sb, red, cfrac, count, scale, seed,
+            icost, fee, sched, adp) in enumerate(spec.metas):
         if reg is None:
             baselines[(topo, sb, seed)] = float(honest_final[j])
         else:
             results_raw.append((j, reg, topo, sb, red, cfrac, count, scale,
-                                seed))
+                                seed, icost, fee, sched, adp))
 
     results = [DerailmentResult(
         attacker_fraction=count / (n_honest + count) if count else 0.0,
@@ -599,10 +656,38 @@ def sweep(loss_fn, init_params, optimizer, data_fn, eval_fn,
         final_coverage=float(last_coverage[j]) if has_custody else 1.0,
         extracted_loss=(float(extracted_final[j]) if has_custody
                         else float("nan")),
-    ) for j, reg, topo, sb, red, cfrac, count, scale, seed in results_raw]
+    ) for j, reg, topo, sb, red, cfrac, count, scale, seed, *_ in results_raw]
+
+    # -- the incentive phase diagram: one EconomyResult per measured lane --
+    econ_results: List[EconomyResult] = []
+    if grid.has_economy:
+        keep = np.asarray(recs.keep)                          # (L, R, N)
+        n_act = np.asarray(recs.n_active)                     # (L, R)
+        coal_tr = np.asarray(recs.coalition_stake)            # (L, R)
+        pay = np.asarray(economy.payoff(state.econ))          # (L, N)
+        for (j, reg, topo, sb, red, cfrac, count, scale, seed,
+             icost, fee, sched, adp) in results_raw:
+            hp = float(pay[j, :n_honest].mean())
+            cp = (float(pay[j, n_honest:n_honest + count].mean())
+                  if count else 0.0)
+            econ_results.append(EconomyResult(
+                regime=reg.name, identity_cost=icost, fee=fee,
+                reward_rate=sched[0], jackpot=sched[1], adaptive=adp,
+                coalition_size=count, seed=seed,
+                outcome=economy.classify_outcome(
+                    honest_active_first=int(keep[j, 0, :n_honest].sum()),
+                    honest_active_last=int(keep[j, -1, :n_honest].sum()),
+                    coalition_stake_last=float(coal_tr[j, -1]),
+                    honest_payoff_mean=hp),
+                honest_payoff=hp, coalition_payoff=cp,
+                coalition_stake_share=float(coal_tr[j, -1]),
+                n_admitted_first=int(n_act[j, 0]),
+                n_admitted_last=int(n_act[j, -1]),
+                final_loss=float(honest_final[j])))
     return SweepResult(grid=grid, results=results, n_programs=1,
                        n_runs=len(spec.lanes), wall_s=time.perf_counter() - t0,
-                       n_devices=plan.n_devices if plan is not None else 1)
+                       n_devices=plan.n_devices if plan is not None else 1,
+                       econ_results=econ_results)
 
 
 # -- economics -------------------------------------------------------------------

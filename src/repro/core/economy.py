@@ -1,0 +1,624 @@
+"""Economy engine (paper §4): stake markets, Sybil pressure, and adaptive
+adversaries as campaign axes.
+
+The paper's incentive claim — rational participation sustains protocol
+training — is a *dynamical* question the passive :class:`~repro.core.ledger.
+Ledger` cannot answer: whether a fee/reward schedule keeps honest capital in
+the swarm depends on admission, slashing, and attacker strategy interacting
+over rounds.  This module makes the economy a **device-resident state**
+threaded through the scanned round exactly like ``contrib``/``slashed`` are
+(see ``core.swarm``), so an entire incentive phase diagram — identity cost ×
+fee × reward schedule × coalition × seed — compiles to one ``jit(vmap(scan))``
+program.  Three coupled pieces:
+
+1. **Stake-weighted admission with Sybil pressure.**  Every identity costs
+   ``identity_cost`` (sunk — the PoW-gated gossip admission of the SNIPPETS
+   exemplar, priced in capital instead of hashes) plus a ``min_stake`` bond.
+   The adversary holds one fixed ``budget``: how many identities it buys is
+   *derived in-program* (``init_econ_state``), and the per-round admission
+   mask is derived from live stakes (``admitted_mask``) — a node whose stake
+   is drained or slashed below the bond drops out of aggregation, audits,
+   and minting.  Cheap identities buy a *count* majority (breaks robust
+   aggregation); expensive identities force few-but-fat stakes (a *stake*
+   majority — captures the fee market instead).
+
+2. **Fee and reward schedules.**  Each round mints ``reward_rate × speed``
+   into a 1-round *pending* escrow (forfeited if the earner is caught —
+   the ledger's "forfeits pending shares" made mechanical), splits a fixed
+   per-round inference-fee inflow pro-rata by stake over kept nodes (the
+   device twin of ``Ledger.distribute_fees``), slashes caught stakes into a
+   pool, pays validator jackpots *from that pool* (never minted — the same
+   conservation fix ``Ledger.pay_jackpot`` applies), and drains per-round
+   operating costs from balance-then-stake.  A node that cannot cover its
+   cost exits for good (``alive`` drops) — the death spiral is absorbing.
+   The whole flow satisfies one conservation identity, checked on device by
+   :func:`conservation_gap`.
+
+3. **Adaptive adversaries.**  ``adaptive=1`` lanes replace the coalition's
+   fixed behaviour with a best response: each round the coalition scores a
+   static menu of attack scales (``ADAPTIVE_SCALES``) against the *known*
+   aggregator — the same masked aggregator the round will apply, evaluated
+   on the anticipated active mask — and submits the scale that pushes the
+   aggregate hardest against the honest descent direction.  It is one
+   traced computation (like the audit recompute), so fixed and adaptive
+   lanes live in the same compiled program and the fixed-vs-adaptive gap
+   is itself a phase-diagram axis.
+
+Layering: this top half is pure (jax + numpy only) and is imported by
+``core.swarm``; everything below the "host-side drivers" line imports swarm
+lazily, so the module also hosts the readable :class:`SequentialEconomy`
+oracle and the :class:`EconomyResult` phase-table summary without an import
+cycle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+_EPS = 1e-9
+
+#: The adaptive coalition's static strategy menu: candidate inner-product
+#: attack scales scored in-program each round.  Spans "hide inside the
+#: clipping radius" (0.5) to "overwhelm a mean" (32) — well separated so the
+#: per-round argmax is stable across engines/float orderings.
+ADAPTIVE_SCALES: Tuple[float, ...] = (0.5, 2.0, 8.0, 32.0)
+
+#: Lane outcomes, in classification priority order (capture trumps collapse).
+OUTCOMES = ("captured", "death_spiral", "sustained")
+
+
+class EconParams(NamedTuple):
+    """Per-lane traced economy knobs (rides ``LaneParams.econ``).
+
+    All scalar fields are () f32 arrays (``adaptive`` is () int32), so a
+    campaign sweeps every knob as lane data inside one compiled program;
+    ``coalition`` is the (N,) bool mask of strategic (adversary) slots."""
+    identity_cost: Array   # () f32 sunk capital per admitted identity
+    budget: Array          # () f32 total adversary capital (buys identities)
+    min_stake: Array       # () f32 admission bond
+    fee_income: Array      # () f32 inference-fee inflow per round (total)
+    reward_rate: Array     # () f32 shares minted per unit speed per kept round
+    op_cost: Array         # () f32 per-round operating cost per unit speed
+    jackpot: Array         # () f32 validator payout per catch (pool-capped)
+    honest_reserve: Array  # () f32 starting balance per honest node
+    adaptive: Array        # () int32 — 1: coalition best-responds each round
+    coalition: Array       # (N,) bool strategic-identity mask
+
+
+class EconState(NamedTuple):
+    """Device-resident economic state — the scanned carry's ``econ`` slot.
+
+    Conservation identity (checked by :func:`conservation_gap`)::
+
+        capital_in.sum() + minted + fees_in
+          == stake.sum() + balance.sum() + pending.sum()
+             + slash_pool + validator_income + burned
+    """
+    stake: Array             # (N,) f32 admission bonds at risk
+    balance: Array           # (N,) f32 spendable shares/capital
+    pending: Array           # (N,) f32 reward escrow (vests next round)
+    capital_in: Array        # (N,) f32 external capital each node brought in
+    alive: Array             # (N,) bool — funded at entry, solvent since
+    minted: Array            # () f32 cumulative reward issuance
+    fees_in: Array           # () f32 cumulative fee inflow
+    burned: Array            # () f32 sunk identity costs + op costs + forfeits
+    slash_pool: Array        # () f32 slashed stake not yet paid as jackpots
+    validator_income: Array  # () f32 jackpots paid (from the pool)
+
+
+def init_econ_state(econ: EconParams, n_nodes: int) -> EconState:
+    """Traced initial economy: the Sybil-pressure knob resolved in-program.
+
+    Honest slots each post the bond, sink the identity cost, and hold a
+    ``honest_reserve`` float.  Coalition slots share one ``budget``: the
+    first ``k = min(floor(budget / (identity_cost + min_stake)), |coalition|)``
+    slots are funded (bond + identity cost), the leftover budget tops up
+    their stakes equally (expensive identities ⇒ few-but-fat stakes), and
+    unfunded slots are born dead — they never pass admission.  Capital that
+    buys nothing stays off the books (``capital_in`` counts only what
+    entered), so the conservation identity holds from round 0."""
+    coal = econ.coalition
+    fcoal = coal.astype(jnp.float32)
+    n_coal = jnp.sum(fcoal)
+    per_identity = econ.identity_cost + econ.min_stake
+    n_afford = jnp.floor(econ.budget / jnp.maximum(per_identity, _EPS))
+    k = jnp.minimum(n_afford, n_coal)
+    # 0-based index of each slot within the coalition (garbage elsewhere —
+    # masked by ``coal`` before use)
+    rank = jnp.cumsum(fcoal) - 1.0
+    funded = coal & (rank < k)
+    leftover = jnp.maximum(econ.budget - k * per_identity, 0.0)
+    top_up = leftover / jnp.maximum(k, 1.0)
+    ffunded = funded.astype(jnp.float32)
+    stake = jnp.where(coal, ffunded * (econ.min_stake + top_up),
+                      econ.min_stake)
+    sunk = jnp.where(coal, ffunded * econ.identity_cost, econ.identity_cost)
+    balance = jnp.where(coal, 0.0, econ.honest_reserve)
+    # distinct zero buffers per scalar — the state is donated through the
+    # scanned run, and donation rejects the same buffer appearing twice
+    zero = lambda: jnp.zeros((), jnp.float32)
+    return EconState(
+        stake=stake, balance=balance,
+        pending=jnp.zeros((n_nodes,), jnp.float32),
+        capital_in=stake + sunk + balance,
+        alive=funded | ~coal,
+        minted=zero(), fees_in=zero(), burned=jnp.sum(sunk),
+        slash_pool=zero(), validator_income=zero())
+
+
+def admitted_mask(econ: EconParams, state: EconState) -> Array:
+    """(N,) bool — who participates this round: alive (funded at entry,
+    never insolvent) and still posting the full bond.  Derived from live
+    stakes, so slashing or cost-drain below ``min_stake`` de-admits
+    in-program."""
+    return state.alive & (state.stake >= econ.min_stake)
+
+
+def econ_round_update(econ: EconParams, state: EconState, *, active: Array,
+                      keep: Array, caught: Array, speeds: Array) -> EconState:
+    """One round of the economy, applied after the audit verdicts.
+
+    Order matters and mirrors the ledger: (1) caught nodes forfeit their
+    pending escrow (burned), everyone else vests it; (2) this round's
+    rewards are minted into escrow for kept nodes; (3) the fee inflow is
+    split pro-rata by stake over kept nodes (no inflow when nobody kept);
+    (4) caught stakes are slashed into the pool; (5) jackpots are paid from
+    the pool, capped by it; (6) operating costs drain balance first, then
+    stake — a node that cannot cover its cost exits for good."""
+    f32 = lambda m: m.astype(jnp.float32)
+    kept, lost, act = f32(keep), f32(caught), f32(active)
+
+    # (1) escrow: forfeit or vest
+    forfeited = jnp.sum(state.pending * lost)
+    balance = state.balance + state.pending * (1.0 - lost)
+    # (2) mint this round's rewards into escrow
+    pending = econ.reward_rate * speeds * kept
+    minted = state.minted + jnp.sum(pending)
+    # (3) fee market: stake-weighted split over kept nodes
+    kept_stake = state.stake * kept
+    tot_stake = jnp.sum(kept_stake)
+    any_kept = tot_stake > 0.0
+    balance = balance + jnp.where(
+        any_kept, econ.fee_income * kept_stake / jnp.maximum(tot_stake, _EPS),
+        0.0)
+    fees_in = state.fees_in + jnp.where(any_kept, econ.fee_income, 0.0)
+    # (4) slash caught stakes into the pool
+    slash_pool = state.slash_pool + jnp.sum(state.stake * lost)
+    stake = state.stake * (1.0 - lost)
+    # (5) jackpots, funded from (and capped by) the pool
+    jackpot_due = econ.jackpot * jnp.sum(lost)
+    jackpot_paid = jnp.minimum(jackpot_due, slash_pool)
+    slash_pool = slash_pool - jackpot_paid
+    validator_income = state.validator_income + jackpot_paid
+    # (6) operating costs: balance first, then stake; insolvency is final
+    cost = econ.op_cost * speeds * act
+    afford = balance + stake
+    paid = jnp.minimum(cost, afford)
+    from_balance = jnp.minimum(cost, balance)
+    balance = balance - from_balance
+    stake = stake - (paid - from_balance)
+    alive = state.alive & ~(active & (cost > afford + 1e-6))
+    burned = state.burned + forfeited + jnp.sum(paid)
+    return EconState(
+        stake=stake, balance=balance, pending=pending,
+        capital_in=state.capital_in, alive=alive, minted=minted,
+        fees_in=fees_in, burned=burned, slash_pool=slash_pool,
+        validator_income=validator_income)
+
+
+def conservation_gap(state: EconState) -> Array:
+    """() f32 — |inflows − holdings| for the conservation identity in the
+    :class:`EconState` docstring.  Traced (usable inside a program); ~1e-4
+    relative is f32 reduction noise, anything larger is a real leak."""
+    inflow = jnp.sum(state.capital_in) + state.minted + state.fees_in
+    held = (jnp.sum(state.stake) + jnp.sum(state.balance)
+            + jnp.sum(state.pending) + state.slash_pool
+            + state.validator_income + state.burned)
+    return jnp.abs(inflow - held)
+
+
+def payoff(state: EconState) -> Array:
+    """(N,) f32 — each node's economic return to date: what it could walk
+    away with (balance + stake + escrow) minus what it brought in."""
+    return state.balance + state.stake + state.pending - state.capital_in
+
+
+def best_response_scale(run_ref_agg, gf: Array, honest_mean: Array,
+                        coalition_active: Array, anticipated_mask: Array,
+                        scales: Sequence[float] = ADAPTIVE_SCALES) -> Array:
+    """The adaptive coalition's in-program inner step: score each candidate
+    inner-product attack scale against the known aggregator and return the
+    winner (a () f32).
+
+    ``run_ref_agg(stack, mask)`` must be the round's *reference* masked
+    aggregator (the attacker's model of the defense — ``core.swarm`` passes
+    the same routed aggregator set the round applies).  A candidate's score
+    is how hard the anticipated aggregate opposes the honest descent
+    direction when every active coalition slot submits ``-s·honest_mean``;
+    the candidates are a static menu, so this is a fixed-size traced
+    computation — no data-dependent control flow enters the scan."""
+    def score(s):
+        stack = jnp.where(coalition_active[:, None],
+                          -s * honest_mean[None, :], gf)
+        agg = run_ref_agg(stack, anticipated_mask)
+        return -jnp.vdot(agg, honest_mean)
+
+    scores = jnp.stack([score(s) for s in scales])
+    return jnp.asarray(scales, jnp.float32)[jnp.argmax(scores)]
+
+
+# ----------------------------- host-side spec ----------------------------------
+@dataclass(frozen=True)
+class EconomyConfig:
+    """Host-side economy spec (``SwarmConfig.economy`` / sweep plumbing) —
+    plain floats, turned into a traced :class:`EconParams` per lane by
+    :meth:`params_for`.  ``coalition=None`` defaults to the roster's
+    byzantine slots (the behaviour-code attackers ARE the strategic
+    capital)."""
+    identity_cost: float = 1.0
+    budget: float = 50.0
+    min_stake: float = 5.0
+    fee_income: float = 1.0
+    reward_rate: float = 0.1
+    op_cost: float = 0.05
+    jackpot: float = 5.0
+    honest_reserve: float = 1.0
+    adaptive: bool = False
+
+    def params_for(self, coalition: np.ndarray) -> EconParams:
+        f = lambda x: jnp.asarray(x, jnp.float32)
+        return EconParams(
+            identity_cost=f(self.identity_cost), budget=f(self.budget),
+            min_stake=f(self.min_stake), fee_income=f(self.fee_income),
+            reward_rate=f(self.reward_rate), op_cost=f(self.op_cost),
+            jackpot=f(self.jackpot), honest_reserve=f(self.honest_reserve),
+            adaptive=jnp.asarray(1 if self.adaptive else 0, jnp.int32),
+            coalition=jnp.asarray(np.asarray(coalition, bool)))
+
+
+def classify_outcome(*, honest_active_first: int, honest_active_last: int,
+                     coalition_stake_last: float, honest_payoff_mean: float,
+                     capture_threshold: float = 0.5) -> str:
+    """Host classification of one lane, in :data:`OUTCOMES` priority order.
+
+    - ``captured``: the coalition ends holding ≥ ``capture_threshold`` of
+      the active stake — it owns the fee market (and, at count majority,
+      the aggregate) regardless of how training went;
+    - ``death_spiral``: honest participation collapsed below half its
+      starting level, or honest capital ends under water — rational nodes
+      would not have stayed;
+    - ``sustained``: neither — the schedule retains honest capital."""
+    if coalition_stake_last >= capture_threshold:
+        return "captured"
+    if (honest_active_last < 0.5 * honest_active_first
+            or honest_payoff_mean < 0.0):
+        return "death_spiral"
+    return "sustained"
+
+
+# ========================== host-side drivers ==================================
+# Everything below imports core.swarm lazily — swarm imports this module's
+# top half, and these drivers close the loop without a cycle.
+
+@dataclass(frozen=True)
+class EconomyResult:
+    """One lane of an incentive phase diagram (see ``derailment.sweep`` /
+    :func:`summarize_sweep`): the economy axes, the outcome, and the
+    payoffs that justify it."""
+    regime: str
+    identity_cost: float
+    fee: float
+    reward_rate: float
+    jackpot: float
+    adaptive: bool
+    coalition_size: int
+    seed: int
+    outcome: str                  # captured | death_spiral | sustained
+    honest_payoff: float          # mean over honest slots
+    coalition_payoff: float       # mean over coalition slots (0 if none)
+    coalition_stake_share: float  # final share of active stake
+    n_admitted_first: int
+    n_admitted_last: int
+    final_loss: float
+
+
+def phase_table(results: Sequence[EconomyResult], *, regime: str,
+                adaptive: bool = False) -> str:
+    """Render the sustained/death-spiral/captured table over
+    (identity_cost rows × fee columns) for one regime, majority-voting
+    over seeds and reward schedules (S=sustained, D=death_spiral,
+    C=captured, lowercase = split vote)."""
+    rs = [r for r in results if r.regime == regime and r.adaptive == adaptive
+          and r.coalition_size > 0]
+    costs = sorted({r.identity_cost for r in rs})
+    fees = sorted({r.fee for r in rs})
+    lines = ["cost\\fee  " + "  ".join(f"{f:>7g}" for f in fees)]
+    for c in costs:
+        cells = []
+        for f in fees:
+            outs = [r.outcome for r in rs
+                    if r.identity_cost == c and r.fee == f]
+            if not outs:
+                cells.append("      .")
+                continue
+            top = max(set(outs), key=outs.count)
+            ch = top[0].upper()
+            cells.append(f"{ch if outs.count(top) == len(outs) else ch.lower():>7}")
+        lines.append(f"{c:<9g}" + "  ".join(cells))
+    return "\n".join(lines)
+
+
+def adaptive_gap(results: Sequence[EconomyResult]) -> Dict[str, float]:
+    """The fixed-vs-adaptive phase-diagram gap: over (regime, cost, fee,
+    schedule, seed) cells present in both halves, how much worse the
+    adaptive coalition makes things — the shift in non-sustained area, in
+    mean honest payoff, and in training damage (``loss_ratio`` is the
+    median per-cell adaptive/fixed final-loss ratio: > 1 means the
+    best-response coalition hurts training where the fixed-scale attack
+    could not — the measurable adaptivity gap)."""
+    def key(r):
+        return (r.regime, r.identity_cost, r.fee, r.reward_rate, r.jackpot,
+                r.coalition_size, r.seed)
+    fixed = {key(r): r for r in results
+             if not r.adaptive and r.coalition_size > 0}
+    adapt = {key(r): r for r in results
+             if r.adaptive and r.coalition_size > 0}
+    common = sorted(set(fixed) & set(adapt))
+    if not common:
+        return {"cells": 0, "bad_frac_fixed": 0.0, "bad_frac_adaptive": 0.0,
+                "gap": 0.0, "honest_payoff_drop": 0.0, "loss_ratio": 1.0}
+    bad = lambda r: r.outcome != "sustained"
+    bf = sum(bad(fixed[k]) for k in common) / len(common)
+    ba = sum(bad(adapt[k]) for k in common) / len(common)
+    drop = (sum(fixed[k].honest_payoff - adapt[k].honest_payoff
+                for k in common) / len(common))
+    ratios = sorted(adapt[k].final_loss / max(fixed[k].final_loss, 1e-9)
+                    for k in common)
+    return {"cells": len(common), "bad_frac_fixed": bf,
+            "bad_frac_adaptive": ba, "gap": ba - bf,
+            "honest_payoff_drop": drop,
+            "loss_ratio": ratios[len(ratios) // 2]}
+
+
+class SequentialEconomy:
+    """The readable per-node host oracle for the economy round — the
+    ``SequentialSwarm``-style reference the batched engine is pinned
+    against (tests/test_economy.py).
+
+    A plain Python loop over nodes with explicit if/else bookkeeping:
+    admission checks, escrow vesting, fee splits, pool-funded jackpots,
+    and cost drains all happen in host float32, drawing every random
+    number from the *same* ``(seed, purpose, round, node)`` fold_in
+    schedule as the batched engine.  Centralized, unfused rounds only —
+    it is an oracle, not an engine."""
+
+    def __init__(self, loss_fn, params, optimizer, nodes, cfg, data_fn):
+        from repro.core import swarm as _swarm
+        if cfg.topology is not None or cfg.staleness_bound:
+            raise ValueError("the economy oracle is centralized+synchronous")
+        if cfg.economy is None:
+            raise ValueError("SequentialEconomy needs SwarmConfig.economy")
+        self._swarm = _swarm
+        self.loss_fn, self.params = loss_fn, params
+        self.optimizer, self.opt_state = optimizer, optimizer.init(params)
+        self.nodes, self.cfg, self.data_fn = list(nodes), cfg, data_fn
+        self._grad = jax.jit(jax.grad(loss_fn))
+        self._flat_shapes = None
+        self.slashed = np.zeros(len(self.nodes), bool)
+        self.history: List[dict] = []
+        self._base_key = jax.random.PRNGKey(cfg.seed)
+        coalition = np.asarray([n.byzantine is not None for n in self.nodes])
+        self.econ_params = cfg.economy.params_for(coalition)
+        self.econ = jax.tree.map(np.asarray,
+                                 init_econ_state(self.econ_params,
+                                                 len(self.nodes)))
+        from repro.core import aggregation
+        self._agg = aggregation.get_masked_aggregator(cfg.aggregator,
+                                                      **cfg.agg_kwargs)
+
+    def _flatten(self, tree):
+        leaves = jax.tree.leaves(tree)
+        if self._flat_shapes is None:
+            self._flat_shapes = [(l.shape, l.dtype) for l in leaves]
+            self._treedef = jax.tree.structure(tree)
+        return jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                                for l in leaves])
+
+    def _unflatten(self, vec):
+        out, off = [], 0
+        for shape, dtype in self._flat_shapes:
+            size = int(np.prod(shape)) if shape else 1
+            out.append(vec[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree.unflatten(self._treedef, out)
+
+    def step(self, rnd: int) -> dict:
+        sw, cfg, ep = self._swarm, self.cfg, self.econ_params
+        n = len(self.nodes)
+        econ = self.econ
+        key = self._base_key
+
+        # -- admission: roster-active ∧ not slashed ∧ alive ∧ bonded -----------
+        min_stake = float(ep.min_stake)
+        active = np.zeros(n, bool)
+        for i, node in enumerate(self.nodes):
+            active[i] = (node.active(rnd) and not self.slashed[i]
+                         and bool(econ.alive[i])
+                         and econ.stake[i] >= min_stake)
+
+        # -- gradients (each node, its own batch) ------------------------------
+        gfs = [None] * n
+        for i in np.flatnonzero(active):
+            gfs[i] = self._flatten(self._grad(self.params,
+                                              self.data_fn(int(i), rnd)))
+        acts = [gfs[i] for i in np.flatnonzero(active)]
+        honest_mean = (jnp.mean(jnp.stack(acts), axis=0) if acts
+                       else jnp.zeros_like(self._flatten(self.params)))
+
+        # -- corruption: fixed behaviours, or the best-response inner step -----
+        from repro.core import compression
+        coalition = np.asarray(jax.device_get(ep.coalition), bool)
+        submitted, wire_keys = dict(), dict()
+        adaptive = int(ep.adaptive) > 0
+        chosen_scale = None
+        if adaptive and acts:
+            coal_act = jnp.asarray(coalition & active)
+            stack = jnp.stack([gfs[i] if active[i]
+                               else jnp.zeros_like(honest_mean)
+                               for i in range(n)])
+            chosen_scale = float(best_response_scale(
+                self._agg, stack, honest_mean, coal_act,
+                jnp.asarray(active)))
+        for i in np.flatnonzero(active):
+            node, gf = self.nodes[int(i)], gfs[i]
+            if coalition[i]:
+                if adaptive:
+                    gf = -chosen_scale * honest_mean
+                elif node.byzantine:
+                    gf = sw.corrupt(node.byzantine, gf, honest_mean,
+                                    node.byzantine_scale,
+                                    sw._node_key(key, sw._CORRUPT, rnd, int(i)))
+            wk = sw._node_key(key, sw._WIRE, rnd, int(i))
+            wire_keys[int(i)] = wk
+            submitted[int(i)] = compression.roundtrip(
+                cfg.compression, wk, gf, **cfg.compression_kwargs)
+
+        # -- audits (§4.2) ------------------------------------------------------
+        from repro.core.verification import audit_flat
+        caught = np.zeros(n, bool)
+        if cfg.verification:
+            v = cfg.verification
+            for i in np.flatnonzero(active):
+                sel = jax.random.uniform(
+                    sw._node_key(key, sw._AUDIT_SEL, rnd, int(i)))
+                if float(sel) >= v.p_check:
+                    continue
+                recomputed = compression.roundtrip(
+                    cfg.compression, wire_keys[int(i)], gfs[i],
+                    **cfg.compression_kwargs)
+                ok, _ = audit_flat(
+                    submitted[int(i)], recomputed,
+                    sw._node_key(key, sw._AUDIT_NOISE, rnd, int(i)), v)
+                if not ok:
+                    caught[i] = True
+                    self.slashed[i] = True
+        keep = active & ~caught
+
+        # -- aggregate + update (masked, same fn as the batched round) ---------
+        if keep.any():
+            stack = jnp.stack([submitted.get(int(i), jnp.zeros_like(honest_mean))
+                               for i in range(n)])
+            agg = self._agg(stack, jnp.asarray(keep))
+            self.params, self.opt_state = self.optimizer.update(
+                self._unflatten(agg), self.opt_state, self.params)
+        else:
+            agg = jnp.zeros_like(honest_mean)
+
+        # -- the economy round, in explicit host arithmetic --------------------
+        f32 = np.float32
+        stake = np.asarray(econ.stake, f32).copy()
+        balance = np.asarray(econ.balance, f32).copy()
+        pending = np.asarray(econ.pending, f32).copy()
+        alive = np.asarray(econ.alive, bool).copy()
+        minted, fees_in = f32(econ.minted), f32(econ.fees_in)
+        burned, pool = f32(econ.burned), f32(econ.slash_pool)
+        validator = f32(econ.validator_income)
+        speeds = np.asarray([nd.speed for nd in self.nodes], f32)
+        # (1) escrow: forfeit if caught, vest otherwise
+        for i in range(n):
+            if caught[i]:
+                burned = f32(burned + pending[i])
+            else:
+                balance[i] = f32(balance[i] + pending[i])
+            pending[i] = f32(0.0)
+        # (2) mint this round's rewards into escrow
+        for i in np.flatnonzero(keep):
+            pending[i] = f32(f32(ep.reward_rate) * speeds[i])
+            minted = f32(minted + pending[i])
+        # (3) fee split pro-rata by stake over kept nodes
+        tot_stake = f32(sum(stake[i] for i in np.flatnonzero(keep)))
+        if tot_stake > 0:
+            for i in np.flatnonzero(keep):
+                balance[i] = f32(balance[i] + f32(ep.fee_income)
+                                 * f32(stake[i] / tot_stake))
+            fees_in = f32(fees_in + f32(ep.fee_income))
+        # (4) slash caught stakes into the pool
+        for i in np.flatnonzero(caught):
+            pool = f32(pool + stake[i])
+            stake[i] = f32(0.0)
+        # (5) jackpots from the pool, capped by it
+        due = f32(f32(ep.jackpot) * caught.sum())
+        paid_jackpot = min(due, pool)
+        pool = f32(pool - paid_jackpot)
+        validator = f32(validator + paid_jackpot)
+        # (6) operating costs: balance, then stake; insolvency is final
+        for i in np.flatnonzero(active):
+            cost = f32(f32(ep.op_cost) * speeds[i])
+            afford = f32(balance[i] + stake[i])
+            if cost > afford + 1e-6:
+                alive[i] = False
+            paid = min(cost, afford)
+            from_bal = min(cost, balance[i])
+            balance[i] = f32(balance[i] - from_bal)
+            stake[i] = f32(stake[i] - f32(paid - from_bal))
+            burned = f32(burned + paid)
+        self.econ = EconState(
+            stake=stake, balance=balance, pending=pending,
+            capital_in=np.asarray(econ.capital_in, f32), alive=alive,
+            minted=minted, fees_in=fees_in, burned=burned, slash_pool=pool,
+            validator_income=validator)
+
+        act_stake = float((stake * keep).sum())
+        coal_stake = float((stake * (keep & coalition)).sum())
+        rec = {
+            "round": rnd, "n_active": int(active.sum()),
+            "n_byzantine": int((active & coalition).sum()),
+            "caught": [self.nodes[int(i)].node_id
+                       for i in np.flatnonzero(caught)],
+            "keep": keep.copy(), "admitted": active.copy(),
+            "agg_norm": float(jnp.linalg.norm(agg)),
+            "coalition_stake": coal_stake / act_stake if act_stake > 0 else 0.0,
+            "chosen_scale": chosen_scale,
+        }
+        self.history.append(rec)
+        return rec
+
+    def run(self, rounds: int) -> List[dict]:
+        return [self.step(r) for r in range(rounds)]
+
+
+def ledger_view(econ: EconState, node_ids: Sequence[str],
+                validator: str = "validator"):
+    """Project a final device :class:`EconState` onto the host
+    :class:`~repro.core.ledger.Ledger` vocabulary: balances (vested +
+    escrow), stakes, pools — so ledger-level invariants (`can_infer`,
+    conservation) can be asserted against engine output."""
+    from repro.core.ledger import Ledger
+    led = Ledger()
+    stake = np.asarray(econ.stake, np.float64)
+    balance = np.asarray(econ.balance, np.float64)
+    pending = np.asarray(econ.pending, np.float64)
+    capital = np.asarray(econ.capital_in, np.float64)
+    for i, nid in enumerate(node_ids):
+        if capital[i] > 0:
+            led.stake(nid, float(capital[i]))
+            # capital beyond the live stake has been spent or re-classed:
+            # move it out of the stake bucket into balance/burn mirrors
+            led.stakes[nid] = float(stake[i])
+        if balance[i] + pending[i] > 0:
+            led.balances[nid] = float(balance[i] + pending[i])
+    led.balances[validator] = float(econ.validator_income)
+    led.slash_pool = float(econ.slash_pool)
+    led.fee_pool = 0.0
+    led.burned = float(econ.burned)
+    # mint events so check_conservation's inflow side matches: rewards and
+    # fees entered the economy as issuance, not staked capital
+    led.history.append(("mint", "rewards", float(econ.minted)))
+    led.history.append(("mint", "fees", float(econ.fees_in)))
+    return led

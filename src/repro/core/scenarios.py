@@ -51,6 +51,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.economy import EconomyConfig
 from repro.core.swarm import (
     NodeSpec,
     SwarmConfig,
@@ -370,6 +371,43 @@ register_scenario(Scenario(
 ))
 
 register_scenario(Scenario(
+    name="economy_rational",
+    description=("The §4 incentive control: a 25% inner-product coalition "
+                 "buys identities from one capital budget (identity cost "
+                 "1.0, bond 5.0) against CenteredClip + p_check=0.5 audits, "
+                 "while fees and rewards pay honest stakes — the schedule "
+                 "the paper argues sustains rational participation.  "
+                 "Admission is stake-gated in-program; slashed or insolvent "
+                 "nodes drop out of aggregation for good."),
+    make_nodes=lambda n: _mixed_nodes(n, max(1, n // 4), "inner_product", 20.0),
+    make_config=lambda seed: SwarmConfig(
+        aggregator="centered_clip",
+        verification=VerificationConfig(p_check=0.5, stake=5.0,
+                                        tolerance=1e-3, jackpot=5.0),
+        economy=EconomyConfig(),
+        seed=seed),
+))
+
+register_scenario(Scenario(
+    name="economy_sybil_adaptive",
+    description=("Sybil pressure meets an adaptive adversary (§4 x §5.5): "
+                 "identities are cheap (cost 0.1), so the coalition's "
+                 "budget buys a count majority, and instead of a fixed "
+                 "behaviour it best-responds each round — scoring a menu "
+                 "of attack scales against the known aggregator and "
+                 "submitting the one that pushes the aggregate hardest "
+                 "against honest descent.  Sparse audits (p_check=0.1) "
+                 "price what adaptivity buys that fixed attacks don't."),
+    make_nodes=lambda n: _mixed_nodes(n, max(1, n // 2), "inner_product", 20.0),
+    make_config=lambda seed: SwarmConfig(
+        aggregator="centered_clip",
+        verification=VerificationConfig(p_check=0.1, stake=5.0,
+                                        tolerance=1e-3, jackpot=5.0),
+        economy=EconomyConfig(identity_cost=0.1, adaptive=True),
+        seed=seed),
+))
+
+register_scenario(Scenario(
     name="partitioned_swarm",
     description=("Near-partition stress (§5.5): two ring clusters joined "
                  "by a single bridge edge (near-zero spectral gap).  "
@@ -456,7 +494,19 @@ class SweepGrid:
     *max* bound's K+1-snapshot ring; honest baselines are shared per
     (topology, staleness bound, seed).  A 0 entry is the synchronous
     limit measured inside the async program (numerically equal, not
-    bit-exact, to the dedicated sync engine — reduction order differs)."""
+    bit-exact, to the dedicated sync engine — reduction order differs).
+
+    Non-empty ``identity_costs`` / ``fees`` / ``reward_schedules`` /
+    ``adaptive`` add the **economy axes** (§4): every cell is additionally
+    crossed with each (identity cost × fee inflow × (reward_rate, jackpot)
+    schedule × adaptive flag) combination — the knobs ride as the traced
+    ``econ`` lane (``economy.EconParams``), the attacker slots double as
+    the strategic coalition holding one ``econ_budget``, and the round
+    gains stake-gated admission, the per-round economy update, and (in
+    adaptive lanes) the coalition's best-response inner step.
+    ``derailment.sweep`` then also emits one ``economy.EconomyResult`` per
+    measured lane, classified sustained / death_spiral / captured.  Empty
+    on all four = no economy lane, exactly as before."""
     name: str
     description: str
     regimes: Tuple[Regime, ...]
@@ -473,10 +523,24 @@ class SweepGrid:
     custody_max_fraction: float = 0.5
     custody_leave_fraction: float = 0.0
     staleness_bounds: Tuple[int, ...] = ()
+    # -- economy axes (§4): empty on all four = no economy lane --------------
+    identity_costs: Tuple[float, ...] = ()
+    fees: Tuple[float, ...] = ()
+    reward_schedules: Tuple[Tuple[float, float], ...] = ()  # (rate, jackpot)
+    adaptive: Tuple[bool, ...] = ()
+    econ_budget: float = 50.0        # the coalition's total capital
+    econ_min_stake: float = 5.0      # admission bond
+    econ_op_cost: float = 0.05       # per-round operating cost per unit speed
+    econ_reserve: float = 1.0        # honest starting balance
 
     @property
     def has_custody(self) -> bool:
         return bool(self.redundancies) or bool(self.coalition_fractions)
+
+    @property
+    def has_economy(self) -> bool:
+        return bool(self.identity_costs) or bool(self.fees) \
+            or bool(self.reward_schedules) or bool(self.adaptive)
 
     @property
     def n_points(self) -> int:
@@ -485,7 +549,11 @@ class SweepGrid:
                 * max(1, len(self.topologies))
                 * max(1, len(self.staleness_bounds))
                 * max(1, len(self.redundancies))
-                * max(1, len(self.coalition_fractions)))
+                * max(1, len(self.coalition_fractions))
+                * max(1, len(self.identity_costs))
+                * max(1, len(self.fees))
+                * max(1, len(self.reward_schedules))
+                * max(1, len(self.adaptive)))
 
     @property
     def n_lanes(self) -> int:
@@ -638,6 +706,60 @@ register_sweep_grid(SweepGrid(
     custody_max_fraction=0.5,
     custody_leave_fraction=0.34,
 ))
+
+register_sweep_grid(SweepGrid(
+    name="no_off_economy",
+    description=("The §4 incentive phase diagram: at what identity cost "
+                 "and fee schedule does rational participation survive a "
+                 "strategic coalition?  2 regimes x 3 identity costs x 3 "
+                 "fees x 2 reward schedules x fixed-vs-adaptive x 2 seeds "
+                 "= 144 lanes (+ baselines) in ONE compiled program — "
+                 "every economy knob is a traced lane, the adaptive "
+                 "best-response an in-program inner step.  Each lane is "
+                 "classified sustained / death_spiral / captured; the "
+                 "fixed-vs-adaptive gap is the paper's open question "
+                 "rendered as a phase-diagram delta.  The fixed attack "
+                 "runs at a moderate scale (2.0); the adaptive coalition "
+                 "recalibrates per round, so the gap concentrates in the "
+                 "weakly-defended (mean) regime and robust aggregation "
+                 "closes it."),
+    regimes=(Regime("mean+audit", "mean", verification=_AUDIT),
+             Regime("centered_clip+audit", "centered_clip",
+                    verification=_AUDIT)),
+    n_honest=8,
+    attacker_counts=(4,),
+    seeds=(0, 1),
+    scales=(2.0,),
+    rounds=20,
+    identity_costs=(0.25, 2.0, 8.0),
+    fees=(0.25, 1.0, 4.0),
+    reward_schedules=((0.05, 2.0), (0.2, 8.0)),
+    adaptive=(False, True),
+))
+
+register_sweep_grid(SweepGrid(
+    name="no_off_economy_smoke",
+    description=("CI smoke for the economy axes: 2 regimes x 2 identity "
+                 "costs x 2 fees x 1 schedule x fixed-vs-adaptive x 1 seed "
+                 "= 16 tiny lanes (+ 1 baseline) with the full economy "
+                 "round (Sybil funding, stake-gated admission, escrowed "
+                 "rewards, pool-funded jackpots, best-response lanes) — "
+                 "small enough for CI, large enough that the mean-regime "
+                 "adaptive lanes show the loss gap."),
+    regimes=(Regime("mean+audit", "mean", verification=_AUDIT),
+             Regime("centered_clip+audit", "centered_clip",
+                    verification=_AUDIT)),
+    n_honest=6,
+    attacker_counts=(3,),
+    seeds=(0,),
+    scales=(2.0,),
+    rounds=8,
+    identity_costs=(0.5, 4.0),
+    fees=(0.5, 2.0),
+    reward_schedules=((0.1, 5.0),),
+    adaptive=(False, True),
+))
+
 
 # -- serving grids (no-off at inference) -----------------------------------------
 @dataclass(frozen=True)

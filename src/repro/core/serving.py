@@ -445,6 +445,29 @@ class ServeResult:
         return float((self.live & demand).sum() / demand.sum())
 
 
+def settle_fees(ledger, holders: Sequence[str], result: ServeResult,
+                fee: float) -> Dict[str, float]:
+    """Mirror a serving lane's device-side fee spending back onto the host
+    :class:`~repro.core.ledger.Ledger`, closing the §4.1 inference-market
+    loop: admission fees deducted on device (``ServeState.balances``) become
+    ``Ledger.charge_fee`` events, and the accumulated pool is paid out to
+    stakers pro-rata by stake (``Ledger.distribute_fees``) — serving income
+    flows to the capital that keeps the model held.
+
+    The lane must have been built from this ledger's balances
+    (``ledger.balance_vector(holders)`` → ``ServeLane.balances``); each
+    holder's spend is recovered as an integer number of fees (device
+    balances are f32 — rounding squashes the accumulation noise), so the
+    ledger's conservation invariant survives the round-trip bit-exactly.
+    Returns the per-staker payouts."""
+    init = ledger.balance_vector(holders)
+    for name, b0, b1 in zip(holders, init, result.balances):
+        spent = fee * round(float(b0 - b1) / fee) if fee > 0 else 0.0
+        if spent > 0:
+            ledger.charge_fee(name, spent)
+    return ledger.distribute_fees()
+
+
 def _result_from_device(state: ServeState, recs: ServeRecord,
                         wall_s: float = 0.0) -> ServeResult:
     return ServeResult(

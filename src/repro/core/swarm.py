@@ -93,7 +93,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, compression
+from repro.core import aggregation, compression, economy
+from repro.core.economy import EconomyConfig, EconParams
 from repro.core.ledger import Ledger
 from repro.core.placement import MeshPlan
 from repro.core.unextractable import (
@@ -142,7 +143,22 @@ class NodeSpec:
     #: when the config sets ``staleness_bound > 0``, and clamped to it; the
     #: *realized* per-round delay is drawn uniformly in [0, min(delay,
     #: bound, round)] from the (seed, _DELAY, round, node) key schedule.
-    delay: int = 0
+    #: ``None`` (the default) derives the delay from ``speed`` — slow nodes
+    #: are stale nodes (see :meth:`effective_delay`); an explicit value
+    #: always overrides the derivation.
+    delay: Optional[int] = None
+
+    @property
+    def effective_delay(self) -> int:
+        """The staleness cap async rounds read.  Explicit ``delay`` wins;
+        otherwise it is derived from ``speed``: a node running at 1/s of
+        the reference speed needs ~s rounds per unit of work, so it may
+        lag ``ceil(1/speed) - 1`` rounds (speed ≥ 1 → 0, 0.5 → 1,
+        0.25 → 3) — the async twin of the ledger's speed-weighted
+        minting."""
+        if self.delay is not None:
+            return self.delay
+        return max(int(np.ceil(1.0 / max(self.speed, 1e-9))) - 1, 0)
 
     def active(self, rnd: int) -> bool:
         return self.join_round <= rnd and (self.leave_round is None or rnd < self.leave_round)
@@ -196,6 +212,13 @@ class SwarmConfig:
     #: bulk-synchronous round — the async machinery is not even traced, so
     #: staleness_bound=0 is bit-exact with the pre-async engine.
     staleness_bound: int = 0
+    #: economy lane (core.economy.EconomyConfig): threads a device-resident
+    #: economic state (stakes, balances, reward escrow, slash pool) through
+    #: the scanned round — stake-gated admission, fee/reward flows, and
+    #: (``adaptive=True``) the coalition's best-response inner step.  The
+    #: coalition defaults to the roster's byzantine slots.  None = no
+    #: economy (the round is bit-exact with the pre-economy engine).
+    economy: Optional[EconomyConfig] = None
 
 
 def corrupt(kind: str, grad_flat: Array, honest_mean: Array, scale: float, key) -> Array:
@@ -278,6 +301,14 @@ class LaneParams(NamedTuple):
     size is static; the delay values are traced, so one compiled campaign
     sweeps *staleness* as a lane axis).  ``None`` (the default) means the
     synchronous round; all lanes of a campaign must agree.
+
+    ``econ`` is the economy lane — a :class:`~repro.core.economy.EconParams`
+    of traced knobs (identity cost, budget, bond, fee/reward/jackpot
+    schedule, adaptive flag, coalition mask).  Traced like every other
+    field, so one compiled campaign sweeps the *incentive* axes; the round
+    gains stake-gated admission, the per-round economy update, and (in
+    adaptive lanes) the coalition's best-response inner step.  ``None``
+    (the default) disables the economy; all lanes of a campaign must agree.
     """
     codes: Array          # (N,) int32 behaviour codes (BEHAVIOUR_CODES)
     scales: Array         # (N,) f32 byzantine scales
@@ -294,6 +325,7 @@ class LaneParams(NamedTuple):
     custody: Optional[Array] = None    # (N, S) bool custody matrix | None
     coalition: Optional[Array] = None  # (N,) bool extraction coalition | None
     delays: Optional[Array] = None     # (N,) int32 max staleness | None
+    econ: Optional[EconParams] = None  # traced economy knobs | None
 
 
 class SwarmState(NamedTuple):
@@ -308,6 +340,10 @@ class SwarmState(NamedTuple):
                           # leading (K+1,) snapshot axis — slot r % (K+1)
                           # holds the params as of the start of round r.
                           # None in synchronous rounds (staleness_bound=0).
+    econ: Any = None      # economy state (economy.EconState): stakes,
+                          # balances, reward escrow, slash pool — advanced
+                          # by econ_round_update each round.  None when the
+                          # round has no economy lane.
 
 
 class RoundRecord(NamedTuple):
@@ -325,6 +361,9 @@ class RoundRecord(NamedTuple):
                           # (1.0 when the round has no custody lane)
     staleness: Array      # () f32 mean realized gradient delay (rounds) over
                           # active nodes (0 in synchronous rounds)
+    coalition_stake: Optional[Array] = None  # () f32 coalition share of the
+                          # kept nodes' post-round stake (economy lanes
+                          # only; None otherwise — the capture trajectory)
 
 
 def lane_for_nodes(nodes: Sequence[NodeSpec], cfg: SwarmConfig, *,
@@ -340,8 +379,10 @@ def lane_for_nodes(nodes: Sequence[NodeSpec], cfg: SwarmConfig, *,
     (same convention: run seeds never reshuffle who holds what) and marks
     the coalition as the last ``ceil(coalition_fraction * N)`` roster
     slots.  ``cfg.staleness_bound > 0`` fills the ``delays`` lane with each
-    node's ``NodeSpec.delay`` clamped to the bound (0 leaves it ``None`` —
-    the synchronous round)."""
+    node's ``NodeSpec.effective_delay`` (explicit ``delay``, else derived
+    from ``speed``) clamped to the bound (0 leaves it ``None`` — the
+    synchronous round).  ``cfg.economy`` fills the ``econ`` lane, with the
+    roster's byzantine slots as the strategic coalition."""
     from repro.core import topology as topo  # local: keep import cycle-free
     v = cfg.verification
     custody = coalition = None
@@ -366,13 +407,18 @@ def lane_for_nodes(nodes: Sequence[NodeSpec], cfg: SwarmConfig, *,
         mixing = jnp.asarray(w, jnp.float32)
     delays = None
     if cfg.staleness_bound > 0:
-        delays = jnp.asarray([min(n.delay, cfg.staleness_bound)
+        delays = jnp.asarray([min(n.effective_delay, cfg.staleness_bound)
                               for n in nodes], jnp.int32)
+    econ = None
+    if cfg.economy is not None:
+        econ = cfg.economy.params_for(
+            np.asarray([n.byzantine is not None for n in nodes]))
     return LaneParams(
         mixing=mixing,
         custody=custody,
         coalition=coalition,
         delays=delays,
+        econ=econ,
         codes=jnp.asarray([n.behaviour_code for n in nodes], jnp.int32),
         scales=jnp.asarray([n.byzantine_scale for n in nodes], jnp.float32),
         speeds=jnp.asarray([n.speed for n in nodes], jnp.float32),
@@ -410,11 +456,12 @@ def init_ring(params, staleness_bound: int):
 
 
 def init_state(params, optimizer, n_nodes: int, *,
-               staleness_bound: int = 0) -> SwarmState:
+               staleness_bound: int = 0, econ=None) -> SwarmState:
     return SwarmState(params=params, opt_state=optimizer.init(params),
                       slashed=jnp.zeros(n_nodes, bool),
                       contrib=jnp.zeros(n_nodes, jnp.float32),
-                      ring=init_ring(params, staleness_bound))
+                      ring=init_ring(params, staleness_bound),
+                      econ=econ)
 
 
 def init_decentralized_state(params, optimizer, n_nodes: int, *,
@@ -567,6 +614,13 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
               else aggregation.get_masked_aggregator)
     agg_fns = [(getter(name, **kw),
                 _accepted_kwargs(name) - set(kw)) for name, kw in agg_specs]
+    # the adaptive coalition's model of the defense (economy lanes): always
+    # the *reference* masked aggregators — the attacker scores candidate
+    # attacks on the raw fp32 stack even when the round itself runs fused
+    # on wire payloads
+    ref_agg_fns = agg_fns if not fused else [
+        (aggregation.get_masked_aggregator(name, **kw),
+         _accepted_kwargs(name) - set(kw)) for name, kw in agg_specs]
     grad_fn = jax.grad(loss_fn)
     idx = jnp.arange(n_nodes)
 
@@ -597,6 +651,20 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
                              "lane (build it via lane_for_nodes with "
                              "SwarmConfig.staleness_bound set)")
         active = (lane.joins <= rnd) & (rnd < lane.leaves) & (~state.slashed)
+        econ = lane.econ
+        if econ is not None:
+            if decentralized:
+                raise ValueError("economy lanes need a centralized round "
+                                 "(stake-gated admission and the fee market "
+                                 "assume one aggregate)")
+            if state.econ is None:
+                raise ValueError("economy lane without SwarmState.econ — "
+                                 "init the state with "
+                                 "economy.init_econ_state(lane.econ, n)")
+            # stake-gated admission, derived in-program from live stakes:
+            # de-admitted nodes vanish from gradients, audits, aggregation
+            # masks, minting, and coverage alike
+            active = active & economy.admitted_mask(econ, state.econ)
         nact = jnp.sum(active.astype(jnp.float32))
 
         # the whole (purpose, round, node) fold_in schedule in three batched
@@ -650,6 +718,30 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
         honest_mean = jnp.sum(gf * maskf, axis=0) / jnp.maximum(nact, 1.0)
         corrupted = _corrupt_all(lane.codes, gf, honest_mean, lane.scales, ck)
 
+        def route_aggs(fns, stack, mask):
+            if route_kwargs:
+                outs = [fn(stack, mask,
+                           **{k: v for k, v in sorted(lane.agg_kwargs.items())
+                              if k in acc})
+                        for fn, acc in fns]
+                return jnp.stack(outs)[lane.agg_id] if len(outs) > 1 else outs[0]
+            return fns[0][0](stack, mask, **lane.agg_kwargs)
+
+        if econ is not None:
+            # adaptive adversary (economy lanes): the coalition scores a
+            # static menu of attack scales against the KNOWN aggregator —
+            # the reference twin of the round's own defense, on the
+            # anticipated active mask — and overrides its fixed behaviour
+            # with the best response.  One traced computation, like the
+            # audit recompute; fixed (adaptive=0) lanes select it away.
+            coal_act = econ.coalition & active
+            best = economy.best_response_scale(
+                lambda s, m: route_aggs(ref_agg_fns, s, m),
+                gf, honest_mean, coal_act, active)
+            use_adaptive = (econ.adaptive > 0) & coal_act
+            corrupted = jnp.where(use_adaptive[:, None],
+                                  -best * honest_mean[None, :], corrupted)
+
         if fused_qsgd:
             submitted = jax.vmap(wire_payload)(wk, corrupted)
         else:
@@ -680,13 +772,7 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
         keep = active & (~caught)
 
         def run_aggs(mask):
-            if route_kwargs:
-                outs = [fn(submitted, mask,
-                           **{k: v for k, v in sorted(lane.agg_kwargs.items())
-                              if k in acc})
-                        for fn, acc in agg_fns]
-                return jnp.stack(outs)[lane.agg_id] if len(outs) > 1 else outs[0]
-            return agg_fns[0][0](submitted, mask, **lane.agg_kwargs)
+            return route_aggs(agg_fns, submitted, mask)
 
         if decentralized:
             w = lane.mixing.astype(jnp.float32)
@@ -738,17 +824,30 @@ def make_round_fn(loss_fn: Callable, optimizer, params_template, n_nodes: int, *
         else:
             coverage = jnp.ones((), jnp.float32)
 
+        new_econ, coalition_stake = state.econ, None
+        if econ is not None:
+            new_econ = economy.econ_round_update(
+                econ, state.econ, active=active, keep=keep, caught=caught,
+                speeds=lane.speeds)
+            fkeep = keep.astype(jnp.float32)
+            act_stake = jnp.sum(new_econ.stake * fkeep)
+            coal_stake = jnp.sum(new_econ.stake * fkeep
+                                 * econ.coalition.astype(jnp.float32))
+            coalition_stake = jnp.where(
+                act_stake > 0.0, coal_stake / jnp.maximum(act_stake, 1e-9),
+                jnp.zeros((), jnp.float32))
+
         new_state = SwarmState(
             params=new_params, opt_state=new_opt,
             slashed=state.slashed | caught,
             contrib=state.contrib + lane.speeds * keep.astype(jnp.float32),
-            ring=ring)
+            ring=ring, econ=new_econ)
         rec = RoundRecord(
             n_active=jnp.sum(active).astype(jnp.int32),
             n_byzantine=jnp.sum(active & (lane.codes > 0)).astype(jnp.int32),
             caught=caught, keep=keep, agg_norm=agg_norm,
             consensus_err=consensus_err, coverage=coverage,
-            staleness=staleness)
+            staleness=staleness, coalition_stake=coalition_stake)
         return new_state, rec
 
     round_fn.fused = fused                    # resolved choice, inspectable
@@ -776,11 +875,12 @@ def scan_rounds(round_fn: Callable, lane: LaneParams, state: SwarmState,
 def make_scan_program(round_fn: Callable, batch_fn: Callable, rounds: int,
                       eval_fn: Optional[Callable] = None) -> Callable:
     """The batched engine's scanned-run program, with donation declared:
-    ``run(lane, params, opt_state, slashed, contrib, ring=None) ->
-    (SwarmState, RoundRecord-stacked, final_loss)``.
+    ``run(lane, params, opt_state, slashed, contrib, ring=None, econ=None)
+    -> (SwarmState, RoundRecord-stacked, final_loss)``.
 
     The engine-owned carry buffers — ``opt_state``, ``slashed``,
-    ``contrib``, and (async rounds) the staleness ``ring`` — are donated:
+    ``contrib``, (async rounds) the staleness ``ring``, and (economy
+    rounds) the ``econ`` state — are donated:
     they are consumed by the scan and handed back as outputs, so XLA can
     run the whole campaign in place instead of holding a dead copy of the
     optimizer state for the program's lifetime (at real model sizes the
@@ -791,11 +891,12 @@ def make_scan_program(round_fn: Callable, batch_fn: Callable, rounds: int,
     ``analysis.jaxpr_audit`` (JX006) checks the declared donation is
     honored in the lowered program."""
     def run(lane: LaneParams, params, opt_state, slashed, contrib,
-            ring=None):
+            ring=None, econ=None):
         state = SwarmState(params=params, opt_state=opt_state,
-                           slashed=slashed, contrib=contrib, ring=ring)
+                           slashed=slashed, contrib=contrib, ring=ring,
+                           econ=econ)
         return scan_rounds(round_fn, lane, state, rounds, batch_fn, eval_fn)
-    return jax.jit(run, donate_argnums=(2, 3, 4, 5))
+    return jax.jit(run, donate_argnums=(2, 3, 4, 5, 6))
 
 
 def run_campaign(loss_fn: Callable, params0, optimizer, data_fn: Callable,
@@ -914,6 +1015,11 @@ def make_campaign_program(loss_fn: Callable, params0, optimizer,
     n = int(lanes.codes.shape[-1])
     decentralized = lanes.mixing is not None
     has_custody = lanes.custody is not None
+    # economy mode is detected from the econ lane like mixing/custody: the
+    # knobs stay traced (incentive axes sweep within one program); the
+    # initial economy is derived per lane INSIDE the program — initial
+    # stakes and the Sybil identity count depend on traced knobs
+    has_econ = lanes.econ is not None
     # async mode is detected from the delays lane like mixing/custody: the
     # ring is sized to the campaign-wide max delay (static — lane *values*
     # stay traced, so staleness is a sweep axis within one program).  An
@@ -941,6 +1047,8 @@ def make_campaign_program(loss_fn: Callable, params0, optimizer,
     user_eval = eval_fn
 
     def one_run(lane):
+        st0 = (state0._replace(econ=economy.init_econ_state(lane.econ, n))
+               if has_econ else state0)
         efn = None
         if user_eval is not None:
             def efn(p):
@@ -955,7 +1063,7 @@ def make_campaign_program(loss_fn: Callable, params0, optimizer,
                 covered = shards_covered(lane.custody, lane.coalition)
                 extracted = user_eval(masked_reconstruct(pe, covered))
                 return jnp.stack([honest, extracted])
-        return scan_rounds(round_fn, lane, state0, rounds, batch_fn, efn)
+        return scan_rounds(round_fn, lane, st0, rounds, batch_fn, efn)
 
     vmapped = (jax.vmap(one_run) if plan is None
                else jax.vmap(one_run, spmd_axis_name=plan.lanes_axis))
@@ -972,7 +1080,9 @@ def history_from_records(recs: RoundRecord, node_ids: Sequence[str], *,
     cons = np.asarray(recs.consensus_err)
     cov = np.asarray(recs.coverage)
     stale = np.asarray(recs.staleness)
-    return [{
+    coal_stake = (np.asarray(recs.coalition_stake)
+                  if recs.coalition_stake is not None else None)
+    out = [{
         "round": start_round + t,
         "n_active": int(n_active[t]),
         "n_byzantine": int(n_byz[t]),
@@ -982,6 +1092,10 @@ def history_from_records(recs: RoundRecord, node_ids: Sequence[str], *,
         "coverage": float(cov[t]),
         "staleness": float(stale[t]),
     } for t in range(agg.shape[0])]
+    if coal_stake is not None:
+        for t, row in enumerate(out):
+            row["coalition_stake"] = float(coal_stake[t])
+    return out
 
 
 def ledger_from_run(state: SwarmState, node_ids: Sequence[str],
@@ -1141,7 +1255,7 @@ class SequentialSwarm(_SwarmBase):
             batch = self.data_fn(i, rnd)
             d, p_node = 0, self.params
             if K > 0:
-                cap = min(node.delay, K, rnd)
+                cap = min(node.effective_delay, K, rnd)
                 d = int(jax.random.randint(
                     _node_key(self._base_key, _DELAY, rnd, i), (), 0,
                     cap + 1))
@@ -1292,6 +1406,9 @@ class Swarm(_SwarmBase):
         # the bounded-staleness snapshot ring (None when synchronous) —
         # engine state like params/opt_state, advanced by every round
         self._ring = init_ring(self.params, cfg.staleness_bound)
+        # the economy state (None without an economy lane) — ditto
+        self._econ_state = (economy.init_econ_state(self._lane.econ, n)
+                            if self._lane.econ is not None else None)
         self._round_fn = jax.jit(functools.partial(self._core, self._lane))
         self._scan_cache: Dict[int, Callable] = {}
         self._batches_traceable: Optional[bool] = None
@@ -1313,7 +1430,7 @@ class Swarm(_SwarmBase):
         return SwarmState(params=self.params, opt_state=self.opt_state,
                           slashed=jnp.asarray(self._slashed_np),
                           contrib=jnp.zeros(len(self.nodes), jnp.float32),
-                          ring=self._ring)
+                          ring=self._ring, econ=self._econ_state)
 
     def _can_scan(self, rounds: int) -> bool:
         """Scanned run needs a traceable batch fn and a membership schedule
@@ -1342,6 +1459,7 @@ class Swarm(_SwarmBase):
         state, core_rec = self._round_fn(self._state(), rnd, batches)
         self.params, self.opt_state = state.params, state.opt_state
         self._ring = state.ring
+        self._econ_state = state.econ
 
         caught_ids = []
         for i in np.flatnonzero(np.asarray(core_rec.caught)):
@@ -1355,15 +1473,22 @@ class Swarm(_SwarmBase):
 
         rec = {
             "round": rnd,
-            "n_active": int(active_np.sum()),
-            "n_byzantine": int(sum(1 for i in np.flatnonzero(active_np)
-                                   if self.nodes[int(i)].byzantine)),
+            # economy rounds gate admission on device (stakes) — the record
+            # is the authoritative count there
+            "n_active": (int(core_rec.n_active) if self._econ_state is not None
+                         else int(active_np.sum())),
+            "n_byzantine": (int(core_rec.n_byzantine)
+                            if self._econ_state is not None
+                            else int(sum(1 for i in np.flatnonzero(active_np)
+                                         if self.nodes[int(i)].byzantine))),
             "caught": caught_ids,
             "agg_norm": float(core_rec.agg_norm),
             "consensus_error": float(core_rec.consensus_err),
             "coverage": float(core_rec.coverage),
             "staleness": float(core_rec.staleness),
         }
+        if core_rec.coalition_stake is not None:
+            rec["coalition_stake"] = float(core_rec.coalition_stake)
         self.history.append(rec)
         return rec
 
@@ -1389,9 +1514,10 @@ class Swarm(_SwarmBase):
         # reassigned from the outputs below — never read the old buffers
         state, recs, _ = self._scan_cache[rounds](
             self._lane, st.params, st.opt_state, st.slashed, st.contrib,
-            st.ring)
+            st.ring, st.econ)
         self.params, self.opt_state = state.params, state.opt_state
         self._ring = state.ring
+        self._econ_state = state.econ
         # run() numbers rounds from 0 on every call (same as the step loop)
         self.history.extend(history_from_records(
             recs, [n.node_id for n in self.nodes]))

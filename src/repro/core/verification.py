@@ -32,13 +32,18 @@ class VerificationConfig:
     per-run lanes, so one compiled program serves every audit regime —
     ``p_check == 0`` disables auditing.  ``stake`` / ``jackpot`` /
     ``reward_per_step`` are host-side economics consumed by the ledger and
-    stay Python floats.
+    stay Python floats.  Jackpots are funded from the slashed-stake pool,
+    never minted (``Ledger.pay_jackpot`` caps the payout by the pool;
+    ``economy.econ_round_update`` applies the same cap on device), so a
+    validator can never be paid more than cheaters actually forfeited —
+    keep ``jackpot <= stake`` unless under-funded jackpots are the point.
     """
     p_check: "float | Array" = 0.1   # probability a given update is audited
     stake: float = 10.0              # capital locked per contributor
     reward_per_step: float = 1.0     # shares minted per verified step
     tolerance: "float | Array" = 1e-3   # relative mismatch tolerated
     jackpot: float = 5.0             # validator reward for a catch
+                                     # (pool-capped — see class docstring)
     numeric_noise: "float | Array" = 1e-5  # simulated cross-stack nondeterminism
 
 

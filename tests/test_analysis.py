@@ -361,15 +361,15 @@ def test_rule_catalog_is_complete():
 
 # ============================ the gate itself =================================
 def test_engine_programs_and_kernels_violation_free():
-    """The integration gate: the six engine programs (20 traced variants),
-    all seven kernels, and the whole source tree audit clean at HEAD
-    (modulo the checked-in baseline, empty at HEAD)."""
+    """The integration gate: the seven engine programs (22 traced
+    variants), all seven kernels, and the whole source tree audit clean at
+    HEAD (modulo the checked-in baseline, empty at HEAD)."""
     from repro.analysis.__main__ import build_report
     report = build_report()
     report.apply_baseline(load_baseline())
     assert set(report.summary["programs"]) == {
         "round_unfused", "round_fused", "round_async", "campaign", "sweep",
-        "serve_step"}
+        "economy", "serve_step"}
     assert len(report.summary["kernels"]) == 7
     assert sum(report.summary["kernels"].values()) >= 7
     assert report.ok, "\n".join(

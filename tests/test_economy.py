@@ -1,0 +1,359 @@
+"""Economy engine coverage (paper §4): stake markets, Sybil pressure, and
+adaptive adversaries as campaign axes.
+
+The load-bearing pins:
+
+- the batched economy round reproduces the :class:`SequentialEconomy` host
+  oracle (admission counts, caught sets, stake/balance trajectories, params)
+  for both fixed-behaviour and best-response coalitions;
+- an economy sweep cell reproduces the single-run engine for the same knobs
+  (lane == run, the campaign-engine contract extended to the econ axes);
+- the conservation identity holds on device, at init and through rounds,
+  and projects onto a conserved host :class:`Ledger` (``ledger_view``);
+- the adaptive-vs-fixed gap is *measurable*: on the registered smoke grid
+  the best-response coalition derails the weakly-defended (mean) regime
+  that the fixed scale-2 attack cannot touch, and robust aggregation
+  closes the gap (ISSUE acceptance).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, economy
+from repro.core.economy import (
+    ADAPTIVE_SCALES,
+    EconomyConfig,
+    SequentialEconomy,
+    admitted_mask,
+    classify_outcome,
+    conservation_gap,
+    econ_round_update,
+    init_econ_state,
+    ledger_view,
+    payoff,
+)
+from repro.core.derailment import sweep
+from repro.core.scenarios import Regime, SweepGrid, get_scenario, get_sweep_grid
+from repro.core.swarm import NodeSpec, SwarmConfig, make_swarm
+from repro.core.verification import VerificationConfig
+from repro.optim.optimizer import SGD
+
+from conftest import tiny_quadratic_problem
+
+
+# ============================ pure device economy ==============================
+def test_sybil_funding_formula():
+    """init_econ_state resolves the Sybil knob in-program: the budget buys
+    floor(budget / (identity_cost + min_stake)) identities (capped by the
+    coalition size), leftover capital tops funded stakes up equally, and
+    unfunded slots are born dead."""
+    coal = np.array([False] * 4 + [True] * 4)
+    # rich budget: all 4 funded, leftover 50 - 4*6 = 26 splits 6.5 each
+    st0 = init_econ_state(
+        EconomyConfig(identity_cost=1.0, budget=50.0, min_stake=5.0)
+        .params_for(coal), 8)
+    np.testing.assert_allclose(np.asarray(st0.stake)[:4], 5.0)
+    np.testing.assert_allclose(np.asarray(st0.stake)[4:], 11.5)
+    assert np.asarray(st0.alive).all()
+    assert float(conservation_gap(st0)) < 1e-4
+
+    # tight budget: identities cost 9 apiece, 10 buys exactly one (+1 top-up)
+    ep = EconomyConfig(identity_cost=4.0, budget=10.0,
+                       min_stake=5.0).params_for(coal)
+    st1 = init_econ_state(ep, 8)
+    stake, alive = np.asarray(st1.stake), np.asarray(st1.alive)
+    np.testing.assert_allclose(stake[4], 6.0)
+    assert (stake[5:] == 0.0).all()
+    assert alive[:5].all() and not alive[5:].any()
+    assert not np.asarray(admitted_mask(ep, st1))[5:].any()
+    assert float(conservation_gap(st1)) < 1e-4
+
+
+def test_round_update_jackpot_pool_capped_and_conserved():
+    """A catch slashes the stake into the pool and the jackpot is paid FROM
+    that pool, capped by it — a validator can never earn more than the
+    cheater forfeited — and the whole flow conserves."""
+    coal = np.array([False, False, True])
+    ep = EconomyConfig(identity_cost=1.0, budget=6.0, min_stake=5.0,
+                       fee_income=1.0, reward_rate=0.1, op_cost=0.0,
+                       jackpot=9.0).params_for(coal)
+    st0 = init_econ_state(ep, 3)
+    active = jnp.ones(3, bool)
+    caught = jnp.array([False, False, True])
+    st1 = econ_round_update(ep, st0, active=active, keep=active & ~caught,
+                            caught=caught, speeds=jnp.ones(3))
+    assert float(st1.validator_income) == pytest.approx(5.0)   # not 9
+    assert float(st1.slash_pool) == pytest.approx(0.0)
+    assert float(np.asarray(st1.stake)[2]) == 0.0
+    assert float(conservation_gap(st1)) < 1e-4
+
+
+def test_death_spiral_is_absorbing():
+    """A node that cannot cover its operating cost exits for good: alive
+    drops, admission never readmits it, and the books stay balanced."""
+    ep = EconomyConfig(identity_cost=0.0, budget=0.0, min_stake=5.0,
+                       fee_income=0.0, reward_rate=0.0, op_cost=10.0,
+                       honest_reserve=1.0).params_for(np.zeros(2, bool))
+    st = init_econ_state(ep, 2)
+    active = admitted_mask(ep, st)
+    assert np.asarray(active).all()
+    st = econ_round_update(ep, st, active=active, keep=active,
+                           caught=jnp.zeros(2, bool), speeds=jnp.ones(2))
+    assert not np.asarray(st.alive).any()          # cost 10 > afford 6
+    active = admitted_mask(ep, st)
+    assert not np.asarray(active).any()            # never readmitted
+    st = econ_round_update(ep, st, active=active, keep=active,
+                           caught=jnp.zeros(2, bool), speeds=jnp.ones(2))
+    assert not np.asarray(st.alive).any()
+    assert float(conservation_gap(st)) < 1e-4
+    # everyone under water: sunk bonds were drained by op costs
+    assert (np.asarray(payoff(st)) < 0).all()
+
+
+def test_classify_outcome_priority():
+    """captured > death_spiral > sustained, on the documented conditions."""
+    base = dict(honest_active_first=8, honest_active_last=8,
+                coalition_stake_last=0.0, honest_payoff_mean=1.0)
+    assert classify_outcome(**base) == "sustained"
+    assert classify_outcome(**{**base, "coalition_stake_last": 0.6}) \
+        == "captured"
+    assert classify_outcome(**{**base, "honest_active_last": 3}) \
+        == "death_spiral"
+    assert classify_outcome(**{**base, "honest_payoff_mean": -0.1}) \
+        == "death_spiral"
+    # capture trumps collapse
+    assert classify_outcome(**{**base, "coalition_stake_last": 0.9,
+                               "honest_active_last": 0}) == "captured"
+    assert set(economy.OUTCOMES) == {"captured", "death_spiral", "sustained"}
+
+
+def test_best_response_maximizes_damage_vs_mean():
+    """Against an undefended mean the menu is monotone in scale — the
+    best response is the largest scale; a tiny coalition against
+    centered_clip picks SOME menu entry (the argmax is total)."""
+    hm = jnp.ones(8)
+    gf = jnp.broadcast_to(hm, (4, 8))
+    coal = jnp.array([False, False, True, True])
+    mask = jnp.ones(4, bool)
+    s = float(economy.best_response_scale(
+        aggregation.get_masked_aggregator("mean"), gf, hm, coal, mask))
+    assert s == max(ADAPTIVE_SCALES)
+    s2 = float(economy.best_response_scale(
+        aggregation.get_masked_aggregator("centered_clip"), gf, hm, coal,
+        mask))
+    assert s2 in ADAPTIVE_SCALES
+
+
+# ====================== batched engine vs host oracle ==========================
+def _econ_roster():
+    return ([NodeSpec(f"h{i}", speed=s)
+             for i, s in enumerate((1.0, 1.0, 0.5, 2.0))]
+            + [NodeSpec(f"adv{i}", byzantine="inner_product",
+                        byzantine_scale=2.0) for i in range(2)])
+
+
+@pytest.mark.parametrize("adaptive,aggregator",
+                         [(False, "centered_clip"), (True, "mean")])
+def test_batched_economy_matches_sequential_oracle(adaptive, aggregator):
+    """The tentpole pin: the scanned batched economy round ≡ the readable
+    per-node SequentialEconomy oracle — admission counts, caught sets,
+    coalition stake share, aggregate norms, final params, and every field
+    of the economic state — for fixed AND best-response coalitions."""
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    nodes = _econ_roster()
+    cfg = SwarmConfig(
+        aggregator=aggregator,
+        verification=VerificationConfig(p_check=0.5, stake=5.0,
+                                        tolerance=1e-3, jackpot=5.0),
+        economy=EconomyConfig(identity_cost=0.5, budget=12.0, min_stake=5.0,
+                              fee_income=1.0, reward_rate=0.1, op_cost=0.05,
+                              jackpot=5.0, honest_reserve=1.0,
+                              adaptive=adaptive),
+        seed=0)
+    opt = SGD(lr=0.1, momentum=0.0)
+    sw = make_swarm(loss_fn, params0, opt, nodes, cfg, data_fn)
+    sw.run(6)                                       # the scanned path
+    oracle = SequentialEconomy(loss_fn, params0, opt, nodes, cfg, data_fn)
+    oracle.run(6)
+
+    for key in ("n_active", "caught"):
+        assert [h[key] for h in sw.history] == \
+            [h[key] for h in oracle.history], key
+    np.testing.assert_allclose(
+        [h["coalition_stake"] for h in sw.history],
+        [h["coalition_stake"] for h in oracle.history], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        [h["agg_norm"] for h in sw.history],
+        [h["agg_norm"] for h in oracle.history], rtol=1e-4, atol=1e-6)
+
+    eb, es = sw._econ_state, oracle.econ
+    for name in ("stake", "balance", "pending", "capital_in"):
+        np.testing.assert_allclose(np.asarray(getattr(eb, name)),
+                                   np.asarray(getattr(es, name)),
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+    np.testing.assert_array_equal(np.asarray(eb.alive), np.asarray(es.alive))
+    for name in ("minted", "fees_in", "burned", "slash_pool",
+                 "validator_income"):
+        assert float(getattr(eb, name)) == pytest.approx(
+            float(getattr(es, name)), rel=1e-4, abs=1e-5), name
+    np.testing.assert_allclose(np.asarray(sw.params["w"]),
+                               np.asarray(oracle.params["w"]),
+                               rtol=1e-5, atol=1e-6)
+    # the device books balance and project onto a conserved host Ledger
+    assert float(conservation_gap(eb)) < 1e-3
+    assert ledger_view(eb, [n.node_id for n in nodes]).check_conservation()
+
+
+def test_sequential_economy_rejects_unsupported_configs():
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    opt = SGD(lr=0.1, momentum=0.0)
+    with pytest.raises(ValueError, match="economy"):
+        SequentialEconomy(loss_fn, params0, opt, _econ_roster(),
+                          SwarmConfig(aggregator="mean"), data_fn)
+    with pytest.raises(ValueError, match="centralized"):
+        SequentialEconomy(
+            loss_fn, params0, opt, _econ_roster(),
+            SwarmConfig(aggregator="mean", topology="ring",
+                        economy=EconomyConfig()), data_fn)
+
+
+def test_economy_scenarios_run_on_both_engines():
+    """The registered §4 scenarios build and agree across engines on the
+    admission trajectory (the economy-aware n_active)."""
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    opt = SGD(lr=0.1, momentum=0.0)
+    for name in ("economy_rational", "economy_sybil_adaptive"):
+        sc = get_scenario(name)
+        nodes, cfg = sc.make_nodes(6), sc.make_config(0)
+        sw = make_swarm(loss_fn, params0, opt, nodes, cfg, data_fn)
+        sw.run(4)
+        oracle = SequentialEconomy(loss_fn, params0, opt, nodes, cfg, data_fn)
+        oracle.run(4)
+        assert [h["n_active"] for h in sw.history] == \
+            [h["n_active"] for h in oracle.history], name
+
+
+# ============================= sweep integration ===============================
+def _quad_sweep(grid, **kw):
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    eval_fn = lambda p: loss_fn(p, data_fn(0, 10_000))
+    return sweep(loss_fn, params0, SGD(lr=0.1, momentum=0.0), data_fn,
+                 eval_fn, grid, **kw), (loss_fn, params0, data_fn, eval_fn)
+
+
+def test_sweep_economy_cell_matches_single_run():
+    """Lane == run, extended to the economy axes: each cell of an economy
+    sweep reproduces the single-run batched engine (itself pinned to the
+    oracle above) for the same knobs — final loss, admission, coalition
+    stake share, and honest payoff."""
+    audit = VerificationConfig(p_check=0.25, stake=10.0, tolerance=1e-3,
+                               jackpot=5.0)
+    grid = SweepGrid(
+        name="econ-tiny", description="", n_honest=5, attacker_counts=(2,),
+        seeds=(0,), scales=(2.0,), rounds=6,
+        regimes=(Regime("mean+audit", "mean", verification=audit),),
+        identity_costs=(0.5,), fees=(1.0,), reward_schedules=((0.1, 5.0),),
+        adaptive=(False, True))
+    (res, (loss_fn, params0, data_fn, eval_fn)) = _quad_sweep(grid)
+    assert res.n_programs == 1
+    assert len(res.results) == len(res.econ_results) == 2
+    assert {r.adaptive for r in res.econ_results} == {False, True}
+
+    for dres, eres in zip(res.results, res.econ_results):
+        nodes = ([NodeSpec(f"h{i}") for i in range(5)]
+                 + [NodeSpec(f"adv{i}", byzantine="inner_product",
+                             byzantine_scale=2.0) for i in range(2)])
+        cfg = SwarmConfig(
+            aggregator="mean", verification=audit,
+            economy=EconomyConfig(identity_cost=0.5, budget=grid.econ_budget,
+                                  min_stake=grid.econ_min_stake,
+                                  fee_income=1.0, reward_rate=0.1,
+                                  op_cost=grid.econ_op_cost, jackpot=5.0,
+                                  honest_reserve=grid.econ_reserve,
+                                  adaptive=eres.adaptive),
+            seed=0)
+        sw = make_swarm(loss_fn, params0, SGD(lr=0.1, momentum=0.0), nodes,
+                        cfg, data_fn)
+        sw.run(6)
+        np.testing.assert_allclose(dres.final_loss,
+                                   float(eval_fn(sw.params)), rtol=2e-3)
+        assert eres.n_admitted_last == sw.history[-1]["n_active"]
+        np.testing.assert_allclose(eres.coalition_stake_share,
+                                   sw.history[-1]["coalition_stake"],
+                                   rtol=1e-4, atol=1e-5)
+        hp = float(np.asarray(payoff(sw._econ_state))[:5].mean())
+        assert eres.honest_payoff == pytest.approx(hp, rel=1e-3, abs=1e-3)
+
+
+def test_smoke_grid_adaptive_gap_is_measurable():
+    """ISSUE acceptance: on the registered smoke grid the best-response
+    coalition derails the mean+audit regime the fixed scale-2 attack
+    cannot (median adaptive/fixed loss ratio >> 1), robust aggregation
+    closes the gap, and the phase table renders both sustained and
+    death-spiral cells."""
+    res, _ = _quad_sweep(get_sweep_grid("no_off_economy_smoke"))
+    assert res.n_programs == 1
+    assert len(res.econ_results) == res.grid.n_points == 16
+
+    gap = res.economy_adaptive_gap()
+    assert gap["cells"] == 8
+    assert gap["loss_ratio"] > 5.0          # adaptive recalibration wins
+    # the gap concentrates in the weakly-defended regime...
+    mean_gap = economy.adaptive_gap(
+        [r for r in res.econ_results if r.regime == "mean+audit"])
+    assert mean_gap["loss_ratio"] > 5.0
+    # ...and robust aggregation closes it
+    cc_gap = economy.adaptive_gap(
+        [r for r in res.econ_results if r.regime == "centered_clip+audit"])
+    assert cc_gap["loss_ratio"] < 2.0
+
+    outcomes = {r.outcome for r in res.econ_results}
+    assert "sustained" in outcomes          # cheap identities + fees hold
+    assert "death_spiral" in outcomes       # cost 4.0 sinks honest payoff
+    table = res.economy_phase_table("mean+audit")
+    assert "cost\\fee" in table and "0.5" in table and "4" in table
+
+
+def test_full_economy_grid_counts():
+    """The full no_off_economy grid compiles its lane plan as registered:
+    every economy knob multiplies the point count (one program's worth of
+    lanes — running it is the benchmark's job, not CI's)."""
+    grid = get_sweep_grid("no_off_economy")
+    assert grid.has_economy
+    assert grid.n_points == 2 * 3 * 3 * 2 * 2 * 2   # reg·cost·fee·sched·adp·seed
+    from repro.core.derailment import build_sweep_lanes
+    spec = build_sweep_lanes(grid)
+    assert len(spec.lanes) == grid.n_points + 2      # + baseline per seed
+
+
+# ====================== satellite: speed-derived delays ========================
+def test_delay_defaults_derive_from_speed():
+    """NodeSpec.delay=None derives the staleness cap from speed
+    (ceil(1/speed) - 1); an explicit delay — including 0 — overrides."""
+    assert NodeSpec("a").effective_delay == 0
+    assert NodeSpec("a", speed=2.0).effective_delay == 0
+    assert NodeSpec("a", speed=0.5).effective_delay == 1
+    assert NodeSpec("a", speed=0.25).effective_delay == 3
+    assert NodeSpec("a", speed=0.25, delay=5).effective_delay == 5
+    assert NodeSpec("a", speed=0.25, delay=0).effective_delay == 0
+
+
+def test_async_speed_derived_delays_match_explicit_twin():
+    """A slow node with no explicit delay runs EXACTLY like its
+    explicitly-delayed twin — same realized staleness, same params — so
+    speed heterogeneity and asynchrony are one axis, not two."""
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    mk = lambda nodes: make_swarm(
+        loss_fn, params0, SGD(lr=0.1, momentum=0.0), nodes,
+        SwarmConfig(aggregator="mean", staleness_bound=2, seed=3), data_fn)
+    derived = mk([NodeSpec("h0"), NodeSpec("h1", speed=0.5),
+                  NodeSpec("h2", speed=0.25)])
+    explicit = mk([NodeSpec("h0", delay=0), NodeSpec("h1", delay=1),
+                   NodeSpec("h2", delay=3)])
+    derived.run(6)
+    explicit.run(6)
+    assert [h["staleness"] for h in derived.history] == \
+        [h["staleness"] for h in explicit.history]
+    np.testing.assert_array_equal(np.asarray(derived.params["w"]),
+                                  np.asarray(explicit.params["w"]))

@@ -173,6 +173,97 @@ def test_property_ledger_conservation(events):
                 contributed / total)
 
 
+_LEDGER_OPS = ("mint", "stake", "transfer", "slash", "jackpot", "fee",
+               "distribute")
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(_LEDGER_OPS), st.integers(0, 3),
+                          st.integers(0, 3),
+                          st.floats(0.0, 20.0, allow_nan=False)),
+                max_size=40))
+def test_property_ledger_conservation_random_ops(ops):
+    """Conservation survives ARBITRARY interleavings of every ledger op —
+    mints, staked capital, transfers, slashes, pool-funded jackpots, fee
+    charges, and fee distribution — checked after every single op.  Also
+    the jackpot cap: a validator is never paid more than the slash pool
+    holds, and the payout drains exactly that much from it."""
+    led = Ledger()
+    names = [f"n{i}" for i in range(4)]
+    for op, i, j, amt in ops:
+        src, dst = names[i], names[j]
+        if op == "mint":
+            led.record_contribution(src, amt)
+        elif op == "stake":
+            led.stake(src, amt)
+        elif op == "transfer":
+            have = led.balances.get(src, 0.0)
+            if have > 0:
+                led.transfer(src, dst, min(amt, have))
+        elif op == "slash":
+            led.slash(src)
+        elif op == "jackpot":
+            pool = led.slash_pool
+            paid = led.pay_jackpot("validator", amt)
+            assert paid <= min(amt, pool) + 1e-9
+            assert led.slash_pool == pytest.approx(pool - paid)
+        elif op == "fee":
+            have = led.balances.get(src, 0.0)
+            if have > 0:
+                led.charge_fee(src, min(amt, have))
+        elif op == "distribute":
+            led.distribute_fees()
+        assert led.check_conservation(), (op, src, amt)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 2**16), st.booleans())
+def test_property_ledger_engine_round_trip(seed, late_joiner):
+    """The ledger <-> engine round trip: both engines' host Ledgers agree
+    BIT-FOR-BIT through churn + audits + slashing (speeds 0.5/1/2 are
+    exactly representable, so speed-weighted mints are exact in f32 and
+    f64 alike), stay conserved with an over-sized (pool-capped) jackpot,
+    and keep agreeing when the same fee events settle on top."""
+    from conftest import tiny_quadratic_problem
+    from repro.core.swarm import NodeSpec, SwarmConfig, make_swarm
+    from repro.optim.optimizer import SGD
+
+    loss_fn, params0, data_fn, _ = tiny_quadratic_problem(8)
+    nodes = [NodeSpec("h0", speed=1.0), NodeSpec("h1", speed=0.5),
+             NodeSpec("h2", speed=2.0, join_round=2 if late_joiner else 0),
+             NodeSpec("h3", speed=1.0, leave_round=5),
+             NodeSpec("adv", byzantine="sign_flip", byzantine_scale=8.0)]
+    cfg = SwarmConfig(
+        aggregator="mean", seed=seed,
+        verification=verification.VerificationConfig(
+            p_check=0.5, stake=4.0, tolerance=1e-3, jackpot=6.0))
+    ledgers = []
+    for engine in ("batched", "sequential"):
+        sw = make_swarm(loss_fn, params0, SGD(lr=0.1, momentum=0.0), nodes,
+                        cfg, data_fn, engine=engine)
+        sw.run(8)
+        assert sw.ledger.check_conservation(), engine
+        ledgers.append(sw.ledger)
+    a, b = ledgers
+    assert a.balances == b.balances
+    assert a.stakes == b.stakes
+    assert (a.burned, a.burned_stake, a.slash_pool, a.fee_pool) == \
+        (b.burned, b.burned_stake, b.slash_pool, b.fee_pool)
+
+    # the same serving-fee events applied to both reconstructed ledgers
+    # keep them identical and conserved (Ledger.charge_fee/distribute_fees
+    # iterate in identical insertion order on both)
+    for led in (a, b):
+        for holder in ("h0", "h1"):
+            have = led.balances.get(holder, 0.0)
+            if have > 0:
+                led.charge_fee(holder, have / 2)
+        led.distribute_fees()
+        assert led.check_conservation()
+    assert a.balances == b.balances
+    assert a.fee_pool == b.fee_pool
+
+
 # ============================ unextractability =================================
 @settings(max_examples=10, deadline=None)
 @given(st.integers(4, 12), st.integers(2, 3), st.integers(0, 4))

@@ -254,6 +254,7 @@ def test_registry_has_the_documented_scenarios():
         "gossip_ring_honest", "byzantine_neighborhood", "partitioned_swarm",
         "straggler_majority", "stale_poisoning", "async_churn",
         "custody_leech", "custody_churn_collapse",
+        "economy_rational", "economy_sybil_adaptive",
     }
 
 
